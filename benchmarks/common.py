@@ -1,0 +1,51 @@
+"""Shared benchmark scaffolding for the paper-figure reproductions.
+
+Scenarios are scaled to CPU (64-128 nodes, 100 Gb/s ticks, 256 KiB - 2 MiB
+flows) from the paper's 1024-node 800 Gb/s setup; the *relative* behavior
+between algorithms is the reproduction target (see EXPERIMENTS.md).
+Every row prints ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.netsim.engine import SimConfig, build, jain_fairness, summarize
+from repro.netsim.units import FatTreeConfig, LinkConfig
+
+LINK = LinkConfig()
+
+# standard scaled topologies
+TREE_8TO1 = FatTreeConfig(racks=8, nodes_per_rack=16, uplinks=2)     # 128 nodes
+TREE_4TO1 = FatTreeConfig(racks=4, nodes_per_rack=16, uplinks=4)     # 64 nodes
+TREE_2TO1 = FatTreeConfig(racks=4, nodes_per_rack=16, uplinks=8)     # 64 nodes
+TREE_FLAT = FatTreeConfig(racks=4, nodes_per_rack=8, uplinks=8)      # 32 nodes, 1:1
+
+
+def run_scenario(tree, wl, *, algo="smartt", lb="reps", max_ticks=60000,
+                 **cfg_kw):
+    cfg = SimConfig(link=LINK, tree=tree, algo=algo, lb=lb, **cfg_kw)
+    sim = build(cfg, wl)
+    t0 = time.time()
+    st = sim.run(max_ticks=max_ticks)
+    st.now.block_until_ready()
+    wall = time.time() - t0
+    s = summarize(sim, st)
+    done_mask = np.asarray(st.done)
+    fd = s["fct_ticks"][done_mask]
+    s["jain"] = jain_fairness(fd) if done_mask.any() else 0.0
+    s["wall_s"] = wall
+    s["completion"] = int(fd.max()) if done_mask.any() else -1
+    return s
+
+
+def emit(name: str, wall_s: float, derived) -> str:
+    row = f"{name},{wall_s*1e6:.0f},{derived}"
+    print(row)
+    return row
+
+
+def ideal_ticks(n_pkts_through_bottleneck: int, brtt: int = 26) -> int:
+    return n_pkts_through_bottleneck + brtt

@@ -1,0 +1,138 @@
+"""Roofline aggregation: three terms per (arch x shape x mesh) cell.
+
+Inputs (produced by the dry-run sweeps):
+  dryrun_results.json   — full-depth compiles: memory analysis, raw
+                          (scan-body-once) cost numbers — the pass/fail +
+                          fits-in-HBM evidence.
+  roofline_results.json — depth-differenced, unrolled lowering: exact
+                          per-step per-device FLOPs / bytes / collective
+                          bytes (see repro.launch.dryrun.roofline_cell).
+
+Hardware model (TPU v5e-class, task spec):
+  peak      197 TFLOP/s bf16 per chip
+  HBM bw    819 GB/s per chip
+  ICI       ~50 GB/s per link
+
+Terms (seconds per step, per the task formulas — cost_analysis numbers are
+per-device after SPMD partitioning, so chips cancels):
+  compute    = flops_per_device / 197e12
+  memory     = bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = non-embedding active
+params; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat recompute, causal-
+mask waste and head overhead.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+_NACT_CACHE = {}
+
+
+def n_active(arch: str) -> int:
+    """Recompute active (non-MoE-scaled) params from the config — the
+    stored value in older sweeps predates the MoE leaf-matching fix."""
+    if arch not in _NACT_CACHE:
+        from repro.configs import get_config
+        _NACT_CACHE[arch] = get_config(arch).active_param_count()
+    return _NACT_CACHE[arch]
+
+
+def analyze(roof: dict, dry: dict | None = None) -> dict:
+    chips = roof["chips"]
+    fl = roof["flops_per_device"]
+    by = roof["bytes_per_device"]
+    coll = sum(roof["collectives_per_device"].values())
+    t_comp = fl / PEAK_FLOPS
+    t_mem = by / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = (6 if roof["kind"] == "train" else 2) * n_active(roof["arch"]) * roof["tokens"]
+    hlo_global = fl * chips
+    out = dict(
+        arch=roof["arch"], shape=roof["shape"], mesh=roof["mesh"],
+        chips=chips,
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        dominant=dominant,
+        bound_frac=terms[dominant] / max(sum(terms.values()), 1e-30),
+        model_flops=mf,
+        hlo_flops_global=hlo_global,
+        useful_ratio=mf / max(hlo_global, 1e-30),
+        step_time_est=max(terms.values()),
+        mfu_est=mf / chips / max(terms.values()) / PEAK_FLOPS,
+        collectives=roof["collectives_per_device"],
+    )
+    if dry:
+        out["temp_bytes_full"] = dry.get("temp_size_in_bytes")
+        out["state_bytes_per_device"] = dry.get("state_bytes_per_device")
+    return out
+
+
+def suggestion(row: dict) -> str:
+    d = row["dominant"]
+    c = row["collectives"]
+    if d == "collective":
+        big = max((k for k in c), key=lambda k: c[k])
+        return (f"dominated by {big} ({c[big]/2**30:.2f} GiB/dev/step): "
+                "overlap with compute or reshard (reduce weight re-gathers)")
+    if d == "memory":
+        return ("HBM-bound: raise arithmetic intensity (fuse, larger "
+                "per-device batch, weight-stationary layout)")
+    if row["useful_ratio"] < 0.5:
+        return ("compute-bound but <50% useful flops: cut remat recompute "
+                "and causal-mask waste (skip masked KV tiles)")
+    return "compute-bound near useful peak: good placement"
+
+
+def table(rows, keys=("arch", "shape", "mesh")) -> str:
+    hdr = ["arch", "shape", "mesh", "t_comp(ms)", "t_mem(ms)", "t_coll(ms)",
+           "bound", "useful", "MFU_est"]
+    lines = ["| " + " | ".join(hdr) + " |",
+             "|" + "|".join("---" for _ in hdr) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join([
+            r["arch"], r["shape"], r["mesh"],
+            f"{r['t_compute']*1e3:.2f}", f"{r['t_memory']*1e3:.2f}",
+            f"{r['t_collective']*1e3:.2f}", r["dominant"],
+            f"{r['useful_ratio']:.2f}", f"{r['mfu_est']:.3f}"]) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    roof = load(os.path.join(HERE, "roofline_results.json"))
+    try:
+        dry = {(r["arch"], r["shape"], r["mesh"]): r
+               for r in load(os.path.join(HERE, "dryrun_results.json"))}
+    except FileNotFoundError:
+        dry = {}
+    rows = []
+    for r in roof:
+        if not r.get("ok"):
+            print(f"# SKIP (failed): {r.get('arch')} {r.get('shape')}")
+            continue
+        row = analyze(r, dry.get((r["arch"], r["shape"], r["mesh"])))
+        rows.append(row)
+    print(table(rows))
+    print()
+    for r in rows:
+        print(f"- {r['arch']} x {r['shape']}: {suggestion(r)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The netsim figures always
+run; the roofline table is appended when the dry-run sweeps' JSON outputs
+exist (see repro.launch.dryrun).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [fig2 fig6 ...]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import fig_benchmarks as F
+
+    wanted = set(sys.argv[1:])
+
+    def selected(fn):
+        return not wanted or any(w in fn.__name__ for w in wanted)
+
+    print("name,us_per_call,derived")
+    rows = []
+    for fn in F.ALL_FIGS:
+        if not selected(fn):
+            continue
+        try:
+            rows.extend(fn())
+        except Exception as e:  # noqa: BLE001
+            print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}")
+
+    # roofline table if the sweep artifacts exist
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if (not wanted or "roofline" in " ".join(wanted)) and \
+            os.path.exists(os.path.join(here, "roofline_results.json")):
+        from benchmarks import roofline
+        print()
+        roofline.main()
+
+    print(f"\n# total wall: {time.time()-t0:.1f}s; {len(rows)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Transport-aware collective estimation: replay a training step's
+collective traffic through the SMaRTT netsim and compare transports.
+
+This is the integration the paper motivates — AI training traffic (DP
+all-reduce, MoE alltoall) carried by the datacenter transport.  The
+efficiency factors here refine the roofline's collective term
+(EXPERIMENTS.md Sec. Roofline).
+
+  PYTHONPATH=src python examples/collective_estimate.py
+"""
+
+from repro.collectives.bridge import estimate
+
+CASES = [
+    # (collective, bytes each device contributes) — representative of the
+    # jamba-398b cross-pod gradient exchange and a dbrx EP dispatch
+    ("all-reduce", 8 << 20),
+    ("all-to-all", 4 << 20),
+]
+
+print(f"{'collective':12s} {'transport':12s} {'eff':>6s} {'straggle':>9s} "
+      f"{'trims':>6s} {'fair':>6s}")
+for kind, nbytes in CASES:
+    for algo in ("smartt", "swift", "eqds"):
+        e = estimate(kind, nbytes, algo=algo, nodes=32, oversub=4)
+        print(f"{kind:12s} {algo:12s} {e.efficiency:6.2f} "
+              f"{e.straggler_spread:9.3f} {e.trims:6d} {e.fairness:6.3f}")
+
+print("\nefficiency = ideal-bottleneck-time / achieved completion; the "
+      "roofline collective term divides by this factor per transport.")

@@ -1,0 +1,35 @@
+"""Batched serving demo: prefill + greedy decode with the cache-carrying
+serve path (the same decode_step the dry-run lowers at 32k/500k contexts).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import generate
+
+cfg = get_config("qwen3-0.6b", reduced=True)
+params = lm.init_params(cfg, jax.random.key(0))
+
+B, S_PROMPT, NEW = 4, 24, 16
+prompts = jax.random.randint(jax.random.key(1), (B, S_PROMPT), 0, cfg.vocab,
+                             jnp.int32)
+
+t0 = time.time()
+out = generate(params, cfg, prompts, max_new=NEW, max_len=S_PROMPT + NEW + 1)
+out.block_until_ready()
+t1 = time.time()
+out2 = generate(params, cfg, prompts, max_new=NEW, max_len=S_PROMPT + NEW + 1)
+out2.block_until_ready()
+t2 = time.time()
+
+print(f"arch: {cfg.name} | batch {B}, prompt {S_PROMPT}, {NEW} new tokens")
+print(f"compile+run: {t1-t0:.2f}s; steady-state: {t2-t1:.3f}s "
+      f"({B*NEW/(t2-t1):.0f} tok/s on 1 CPU core)")
+print("generated token ids (first request):", out[0].tolist())
+assert out.shape == (B, NEW)

@@ -1,0 +1,42 @@
+"""musicgen-large [audio]: 48L d_model=2048 32H (kv=32) d_ff=8192
+vocab=2048 — decoder-only over EnCodec tokens.  [arXiv:2306.05284; hf]
+
+The EnCodec frontend is a STUB per the task spec: ``input_specs`` provides
+precomputed frame embeddings [B, S, d_model]; the head predicts the 2048
+codebook entries.  (The multi-codebook delay pattern collapses to a single
+stream under the stub.)
+"""
+
+from repro.models.config import ModelConfig, dense_pattern
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large",
+        d_model=2048,
+        n_layers=48,
+        pattern=dense_pattern(),
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab=2048,
+        frontend="embeddings",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large-reduced",
+        d_model=64,
+        n_layers=2,
+        pattern=dense_pattern(),
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab=128,
+        frontend="embeddings",
+        q_chunk=16,
+        k_chunk=16,
+    )

@@ -1,0 +1,120 @@
+"""Assigned input shapes x step kinds, and ShapeDtypeStruct builders.
+
+  train_4k      seq=4096    global_batch=256   train_step
+  prefill_32k   seq=32768   global_batch=32    serve prefill
+  decode_32k    seq=32768   global_batch=128   serve decode (1 new token,
+                                               KV cache of seq_len)
+  long_500k     seq=524288  global_batch=1     long-context decode —
+                                               SSM/hybrid only (sub-quadratic);
+                                               skipped for pure full-attention
+                                               archs per the task spec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import MIXER_MAMBA, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq: int
+    global_batch: int
+    kind: str                   # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    return any(s.mixer == MIXER_MAMBA for s in cfg.pattern)
+
+
+def applicable_shapes(cfg: ModelConfig):
+    """The task spec: long_500k only for SSM/hybrid families."""
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not is_subquadratic(cfg):
+            continue
+        out.append(s)
+    return out
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, *, batch: int | None = None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns a dict matching the step signature:
+      train   -> {"batch": {tokens/embeds, labels[, cross]}}
+      prefill -> {"batch": {tokens/embeds[, cross]}}
+      decode  -> {"batch": {tokens/embeds}, "caches": ..., "cache_len": ...}
+    """
+    b = batch or shape.global_batch
+    d = cfg.d_model
+    emb = jnp.bfloat16
+
+    def front(s):
+        if cfg.frontend == "tokens":
+            return {"tokens": _sd((b, s), jnp.int32)}
+        return {"embeds": _sd((b, s, d), emb)}
+
+    if shape.kind == "train":
+        batch_spec = dict(front(shape.seq))
+        batch_spec["labels"] = _sd((b, shape.seq), jnp.int32)
+        if cfg.cross_kv_len:
+            batch_spec["cross"] = _sd((b, cfg.cross_kv_len, d), emb)
+        return {"batch": batch_spec}
+
+    if shape.kind == "prefill":
+        batch_spec = dict(front(shape.seq))
+        if cfg.cross_kv_len:
+            batch_spec["cross"] = _sd((b, cfg.cross_kv_len, d), emb)
+        return {"batch": batch_spec, "max_len": shape.seq}
+
+    # decode: one new token against a cache of length seq
+    batch_spec = dict(front(1))
+    caches = jax.eval_shape(
+        lambda: lm.init_cache(cfg, b, shape.seq))
+    return {
+        "batch": batch_spec,
+        "caches": caches,
+        "cache_len": _sd((b,), jnp.int32),
+    }
+
+
+def synth_inputs(cfg: ModelConfig, shape: Shape, key, *, batch: int | None = None):
+    """Concrete random inputs matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, shape, batch=batch)
+    b = batch or shape.global_batch
+
+    def realize(sd, k):
+        if sd.dtype == jnp.int32:
+            return jax.random.randint(k, sd.shape, 0, max(cfg.vocab, 2), jnp.int32)
+        return jax.random.normal(k, sd.shape, jnp.float32).astype(sd.dtype) * 0.02
+
+    keys = iter(jax.random.split(key, 64))
+    out = {}
+    for name, v in specs.items():
+        if name == "batch":
+            out["batch"] = {kk: realize(vv, next(keys)) for kk, vv in v.items()}
+        elif name == "caches":
+            out["caches"] = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), v)
+        elif name == "cache_len":
+            out["cache_len"] = jnp.full(v.shape, shape.seq, jnp.int32)
+        else:
+            out[name] = v
+    return out

@@ -1,0 +1,33 @@
+"""Dispatch table: algorithm name -> per-tick CC update function.
+
+The algorithm choice is static at trace time (each algorithm owns its jit
+specialization); all numeric parameters stay traced so tuning never
+recompiles.
+"""
+
+from __future__ import annotations
+
+from repro.core import baselines
+from repro.core.smartt import smartt_update
+
+ALGORITHMS = {
+    "smartt": smartt_update,
+    "swift": baselines.swift_update,
+    "mprdma": baselines.mprdma_update,
+    "bbr": baselines.bbr_update,
+    "eqds": baselines.eqds_update,
+    "eqds_smartt": baselines.eqds_smartt_update,
+    "ecn_only": baselines.ecn_only_update,
+    "delay_only": baselines.delay_only_update,
+}
+
+# algorithms whose transmission is gated by receiver credits
+CREDIT_BASED = {"eqds", "eqds_smartt"}
+# algorithms that pace by rate rather than window alone
+PACED = {"bbr"}
+
+
+def get(name: str):
+    if name not in ALGORITHMS:
+        raise KeyError(f"unknown CC algorithm {name!r}; have {sorted(ALGORITHMS)}")
+    return ALGORITHMS[name]

@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for the cc_update kernel.
+
+The oracle *is* the paper-faithful implementation in ``repro.core.smartt``:
+the kernel must produce bit-identical window updates.  This module adapts it
+to the kernel's packed flat-array calling convention.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.smartt import smartt_update
+from repro.core.types import CCEvent, CCParams, CCState
+
+# scalar parameter vector layout (see ops.py)
+PARAM_FIELDS = (
+    "mtu", "bdp", "maxcwnd", "mincwnd", "fd", "md", "fi", "k_fast",
+    "qa_scaling", "wtd_alpha", "wtd_thresh", "fi_rtt_tol", "react_every",
+)
+
+STATE_F32 = ("cwnd", "acked", "qa_end", "bytes_to_ignore", "bytes_ignored",
+             "fi_count", "avg_wtd")
+STATE_I32 = ("trigger_qa", "fi_active", "ack_count")
+EVENT_F32 = ("ack_bytes", "rtt", "trim_bytes", "to_bytes", "unacked")
+EVENT_I32 = ("has_ack", "ecn", "n_trims", "n_timeouts")
+
+
+def _params_from_vec(vec, brtt, trtt, mi):
+    kw = {name: vec[i] for i, name in enumerate(PARAM_FIELDS)}
+    kw["react_every"] = kw["react_every"].astype(jnp.int32)
+    kw["brtt"] = brtt
+    kw["trtt"] = trtt
+    kw["mi"] = mi
+    z = jnp.zeros(())
+    for extra in ("sw_ai", "sw_beta", "sw_max_mdf", "bbr_probe_gain",
+                  "bbr_drain_gain", "bbr_cwnd_gain"):
+        kw[extra] = z
+    return CCParams(**kw)
+
+
+def _state(shape, f32s, i32s):
+    z = jnp.zeros(shape, jnp.float32)
+    kw = dict(zip(STATE_F32, f32s))
+    kw["trigger_qa"] = i32s[0] != 0
+    kw["fi_active"] = i32s[1] != 0
+    kw["ack_count"] = i32s[2]
+    for unused in ("last_dec", "bw_est", "rtprop", "win_delivered", "win_end",
+                   "pacing_rate", "credits", "spec_budget"):
+        kw[unused] = z
+    return CCState(**kw)
+
+
+def cc_update_ref(param_vec, brtt, trtt, mi, now,
+                  state_f32s, state_i32s, event_f32s, event_i32s):
+    """Flat-argument oracle.  All per-flow arrays share one (arbitrary)
+    shape; returns (state_f32s', state_i32s') in the same layout."""
+    p = _params_from_vec(param_vec, brtt, trtt, mi)
+    s = _state(brtt.shape, state_f32s, state_i32s)
+    ev = CCEvent(
+        has_ack=event_i32s[0] != 0,
+        ack_bytes=event_f32s[0],
+        ecn=event_i32s[1] != 0,
+        rtt=event_f32s[1],
+        ack_entropy=jnp.zeros(brtt.shape, jnp.int32),
+        n_trims=event_i32s[2],
+        trim_bytes=event_f32s[2],
+        n_timeouts=event_i32s[3],
+        to_bytes=event_f32s[3],
+        unacked=event_f32s[4],
+        credit_grant=jnp.zeros(brtt.shape, jnp.float32),
+    )
+    s2 = smartt_update(p, s, ev, now)
+    f32s = tuple(getattr(s2, n) for n in STATE_F32)
+    i32s = (s2.trigger_qa.astype(jnp.int32), s2.fi_active.astype(jnp.int32),
+            s2.ack_count)
+    return f32s, i32s

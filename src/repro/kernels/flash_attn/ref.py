@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for blocked causal attention: naive softmax(QK^T/sqrt(d))V."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B, H, Sq, D], k/v: [B, H, Sk, D] (kv heads already broadcast).
+    ``window`` > 0 applies sliding-window attention of that width.
+    Returns [B, H, Sq, D] in f32."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d)
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)   # align ends (decode-friendly)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = _softmax(logits)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the RED/trim switch-datapath kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.netsim import hashing
+
+
+def red_mark_ref(q_size, arrivals, cap, kmin, kmax, tick, salt):
+    """RED dequeue-marking + trim admission for every port.
+
+    Args:
+      q_size: i32[Q] current occupancy of each port queue.
+      arrivals: i32[Q] packets attempting to enqueue this tick.
+      cap/kmin/kmax: queue capacity and RED thresholds (scalars).
+      tick, salt: hash lanes for the marking coin flip.
+
+    Returns:
+      mark: bool[Q] — ECN-mark the packet dequeued from this port
+            (probability linear in occupancy between kmin and kmax).
+      admit: i32[Q] — how many of the arrivals fit (rest get trimmed).
+      trim: i32[Q] — arrivals that must be trimmed (buffer full).
+    """
+    qf = q_size.astype(jnp.float32)
+    p = jnp.clip((qf - kmin) / jnp.maximum(kmax - kmin, 1e-6), 0.0, 1.0)
+    qidx = jnp.arange(q_size.shape[-1], dtype=jnp.int32)
+    qidx = jnp.broadcast_to(qidx.reshape((1,) * (q_size.ndim - 1) + (-1,)),
+                            q_size.shape)
+    u = hashing.uniform01(tick.astype(jnp.int32) * jnp.int32(131071) + qidx,
+                          salt.astype(jnp.int32))
+    mark = (u < p) & (q_size > 0)
+    space = jnp.maximum(cap.astype(jnp.int32) - q_size, 0)
+    admit = jnp.minimum(arrivals, space)
+    trim = arrivals - admit
+    return mark, admit, trim

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Mamba-2 SSD kernel: naive sequential recurrence.
+
+    S_t = exp(dt_t * A) * S_{t-1} + (dt_t * x_t) outer B_t
+    y_t = C_t @ S_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, loga, B, C):
+    """x: [BH, L, P] inputs, loga: [BH, L] = dt*A (negative),
+    B, C: [BH, L, N].  x is pre-scaled by dt.  Returns y: [BH, L, P]."""
+
+    def scan_one(x1, loga1, B1, C1):
+        def body(S, inp):
+            xt, lat, Bt, Ct = inp
+            S = jnp.exp(lat) * S + jnp.outer(Bt, xt)       # [N, P]
+            return S, Ct @ S                                # [P]
+
+        N = B1.shape[-1]
+        P = x1.shape[-1]
+        S0 = jnp.zeros((N, P), jnp.float32)
+        _, y = jax.lax.scan(body, S0, (x1, loga1, B1, C1))
+        return y
+
+    return jax.vmap(scan_one)(x.astype(jnp.float32), loga.astype(jnp.float32),
+                              B.astype(jnp.float32), C.astype(jnp.float32))

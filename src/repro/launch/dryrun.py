@@ -1,0 +1,356 @@
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+partitions and compiles against the production meshes, and extract the
+roofline inputs (FLOPs, bytes, collective traffic, per-device memory).
+
+Run (one cell):
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k [--multi-pod] [--out out.json]
+Run everything:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+# The dry-run needs 512 placeholder devices so jax.make_mesh can build the
+# production meshes.  jax locks the device count at first init, so this MUST
+# precede every other import (including repro.*, which import jax).
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, applicable_shapes, input_specs
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim import adamw
+from repro.sharding import Shardings
+from repro.train.step import TrainConfig, make_train_step
+
+# Per-arch execution knobs (sized by the napkin math in DESIGN.md Sec. 7:
+# microbatching + FSDP + sequence sharding + bf16 moments for the >=90B
+# models so everything fits 16 GB/chip).
+ARCH_RUN = {
+    "llama-3.2-vision-90b": dict(micro=16, fsdp=True, sp=True, adam="bfloat16"),
+    "qwen2-0.5b": dict(micro=1, fsdp=False, sp=False, adam="float32"),
+    "qwen3-0.6b": dict(micro=1, fsdp=False, sp=False, adam="float32"),
+    "minicpm3-4b": dict(micro=8, fsdp=False, sp=True, adam="float32"),
+    "phi3-mini-3.8b": dict(micro=4, fsdp=False, sp=True, adam="float32"),
+    "musicgen-large": dict(micro=4, fsdp=False, sp=True, adam="float32"),
+    "mamba2-780m": dict(micro=4, fsdp=False, sp=False, adam="float32"),
+    "dbrx-132b": dict(micro=16, fsdp=True, sp=True, adam="bfloat16"),
+    "mixtral-8x22b": dict(micro=16, fsdp=True, sp=True, adam="bfloat16"),
+    "jamba-1.5-large-398b": dict(micro=16, fsdp=True, sp=True, adam="bfloat16"),
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+
+def _shaped(sds, spec_tree, mesh):
+    return jax.tree.map(
+        lambda sd, sp: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype, sharding=NamedSharding(mesh, sp)),
+        sds, spec_tree)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in partitioned HLO."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    # e.g.  %all-reduce.5 = f32[16,1024]{1,0} all-reduce(...)
+    pat = re.compile(
+        r"= \(?([a-z0-9]+)\[([0-9,]*)\][^ ]* ("
+        + "|".join(COLLECTIVES) + r")[\.\( ]")
+    for m in pat.finditer(hlo_text):
+        dt, dims, op = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        out[op] += nbytes
+        counts[op] += 1
+    out["counts"] = counts
+    return out
+
+
+def per_device_bytes(tree_sds, spec_tree, mesh) -> int:
+    """Analytic bytes/device for a sharded pytree."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(sd, sp):
+        n = int(np.prod(sd.shape)) * jnp.dtype(sd.dtype).itemsize
+        denom = 1
+        for entry in sp:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                denom *= sizes.get(ax, 1)
+        return n // max(denom, 1)
+
+    return sum(jax.tree.leaves(jax.tree.map(one, tree_sds, spec_tree)))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, reduced: bool = False,
+               run_overrides: dict | None = None):
+    """Returns (fn, example_args_with_shardings, meta)."""
+    cfg = get_config(arch, reduced=reduced)
+    run = dict(ARCH_RUN[arch])
+    if run_overrides:
+        run.update(run_overrides)
+    return _build_with_cfg(cfg, arch, shape_name, mesh, run)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             reduced: bool = False, verbose: bool = True,
+             run_overrides: dict | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, meta = build_cell(arch, shape_name, mesh, reduced=reduced,
+                                run_overrides=run_overrides)
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    res = dict(
+        meta,
+        mesh="2x16x16" if multi_pod else "16x16",
+        ok=True,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        flops=float(cost.get("flops", -1.0)) if cost else -1.0,
+        bytes_accessed=float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+        collectives={k: v for k, v in coll.items()},
+        hlo_bytes=len(hlo),
+    )
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                res[attr] = int(v)
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {res['mesh']}: OK "
+              f"(lower {res['lower_s']}s, compile {res['compile_s']}s, "
+              f"flops {res['flops']:.3e}, "
+              f"state/device {meta.get('state_bytes_per_device', 0)/2**30:.2f} GiB)")
+        print(f"  collectives: { {k: f'{v/2**20:.1f}MiB' for k, v in res['collectives'].items() if k != 'counts'} }")
+    return res
+
+
+def _nonembed_params(cfg) -> int:
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.key(0)))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        names = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                         for k in path)
+        if "embed" in names or "lm_head" in names:
+            continue
+        n = int(np.prod(leaf.shape))
+        if "experts" not in names and cfg.n_experts and any(
+                w in names for w in ("gate", "up", "down")) and len(leaf.shape) >= 3:
+            pass
+        total += n
+    return total
+
+
+def roofline_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                  q_chunk: int = 8192, verbose: bool = True,
+                  run_overrides: dict | None = None) -> dict:
+    """Exact per-step cost extraction via depth differencing.
+
+    XLA's cost_analysis counts loop bodies once, so we lower *unrolled*
+    variants at repeats=1 and repeats=2 (full width, microbatches=1) and
+    linearly extrapolate: total = c1 + (G-1) * (c2 - c1).  The difference
+    isolates one pattern-repetition exactly; embed/head/optimizer overhead
+    lives in c1.
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg_full = get_config(arch)
+    G = cfg_full.repeats
+    run = dict(ARCH_RUN[arch])
+    run["micro"] = 1
+    if run_overrides:
+        run.update(run_overrides)
+
+    costs = []
+    for reps in (1, 2):
+        cfg = dataclasses.replace(
+            cfg_full, n_layers=len(cfg_full.pattern) * reps, unroll=True,
+            q_chunk=q_chunk, k_chunk=q_chunk)
+        fn, args, _ = _build_with_cfg(cfg, arch, shape_name, mesh, run)
+        with mesh:
+            compiled = jax.jit(fn).lower(*args).compile()
+            cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        costs.append(dict(
+            flops=float(cost.get("flops", 0.0)),
+            bytes=float(cost.get("bytes accessed", 0.0)),
+            coll={k: v for k, v in coll.items() if k != "counts"},
+        ))
+
+    def extrap(key):
+        if isinstance(costs[0][key], dict):
+            return {k: costs[0][key][k] + (G - 1) *
+                    (costs[1][key][k] - costs[0][key][k])
+                    for k in costs[0][key]}
+        return costs[0][key] + (G - 1) * (costs[1][key] - costs[0][key])
+
+    shape = SHAPES[shape_name]
+    n_all = cfg_full.param_count()
+    n_act = cfg_full.active_param_count()
+    res = dict(
+        arch=arch, shape=shape_name, kind=shape.kind,
+        mesh="2x16x16" if multi_pod else "16x16",
+        chips=512 if multi_pod else 256,
+        flops_per_device=extrap("flops"),
+        bytes_per_device=extrap("bytes"),
+        collectives_per_device=extrap("coll"),
+        params=n_all, params_active=n_act,
+        tokens=shape.global_batch * (shape.seq if shape.kind != "decode" else 1),
+        ok=True,
+    )
+    if verbose:
+        print(f"[roofline] {arch} x {shape_name} x {res['mesh']}: "
+              f"flops/dev {res['flops_per_device']:.3e} "
+              f"bytes/dev {res['bytes_per_device']:.3e}")
+    return res
+
+
+def _build_with_cfg(cfg, arch, shape_name, mesh, run):
+    """build_cell with an explicit (possibly depth-reduced) config."""
+    shape = SHAPES[shape_name]
+    sh = Shardings(mesh, seq_shard=run["sp"],
+                   decode_replicate=bool(run.get("dec2d", False)))
+    if run.get("moe_sorted"):
+        cfg = dataclasses.replace(cfg, moe_sorted=True)
+    if run.get("moe_bf16"):
+        cfg = dataclasses.replace(cfg, moe_bf16=True)
+    if run.get("attn_bf16"):
+        cfg = dataclasses.replace(cfg, attn_bf16=True)
+    if run.get("moe_local"):
+        cfg = dataclasses.replace(cfg, moe_local_chunks=16)
+    key = jax.random.key(0)
+    dec2d = bool(run.get("dec2d")) and shape.kind == "decode"
+    params_sds = jax.eval_shape(lambda: lm.init_params(cfg, key))
+    pspecs = S.param_specs(cfg, sh, params_sds, fsdp=run["fsdp"],
+                           decode2d=dec2d)
+    params_in = _shaped(params_sds, pspecs, mesh)
+    cell = input_specs(cfg, shape)
+    bspecs = S.batch_specs(cfg, sh, cell["batch"])
+    batch_in = _shaped(cell["batch"], bspecs, mesh)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind}
+
+    if shape.kind == "train":
+        acfg = adamw.AdamWConfig(moment_dtype=run["adam"])
+        tcfg = TrainConfig(adam=acfg, microbatches=run["micro"])
+        opt_sds = jax.eval_shape(lambda: adamw.init(acfg, params_sds))
+        ospecs = adamw.zero1_state_specs(acfg, pspecs, params_sds, sh)
+        opt_in = _shaped(opt_sds, ospecs, mesh)
+        fn = make_train_step(cfg, tcfg, sh)
+        args = (params_in, opt_in, batch_in)
+        meta["state_bytes_per_device"] = (
+            per_device_bytes(params_sds, pspecs, mesh)
+            + per_device_bytes(opt_sds, jax.tree.map(lambda x: x, ospecs),
+                               mesh))
+    elif shape.kind == "prefill":
+        def fn(params, batch):
+            return lm.prefill(params, cfg, batch, max_len=cell["max_len"],
+                              sh=sh)
+        args = (params_in, batch_in)
+        meta["state_bytes_per_device"] = per_device_bytes(params_sds, pspecs, mesh)
+    else:
+        def fn(params, batch, caches, cache_len):
+            return lm.decode_step(params, cfg, batch, caches, cache_len, sh=sh)
+        cspecs = S.cache_specs(cfg, sh, cell["caches"])
+        caches_in = _shaped(cell["caches"], cspecs, mesh)
+        cl_in = jax.ShapeDtypeStruct(
+            cell["cache_len"].shape, cell["cache_len"].dtype,
+            sharding=NamedSharding(mesh, P(sh.maybe(
+                sh.batch_axes, cell["cache_len"].shape[0], "cache_len"))))
+        args = (params_in, batch_in, caches_in, cl_in)
+        meta["state_bytes_per_device"] = (
+            per_device_bytes(params_sds, pspecs, mesh)
+            + per_device_bytes(cell["caches"], cspecs, mesh))
+    return fn, args, meta
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use reduced configs (CI smoke)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="depth-differencing cost extraction instead of the "
+                         "full-depth compile")
+    ap.add_argument("--set", dest="sets", action="append", default=[],
+                    metavar="K=V", help="run-knob overrides, e.g. "
+                    "--set dec2d=1 --set micro=8 (hillclimb experiments)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for kv in args.sets:
+        k, v = kv.split("=", 1)
+        if k == "micro":
+            overrides[k] = int(v)
+        elif k == "adam":
+            overrides[k] = v
+        else:
+            overrides[k] = v.lower() in ("1", "true", "yes")
+
+    runner = roofline_cell if args.roofline else run_cell
+    kw = {"run_overrides": overrides} if args.roofline else \
+        {"reduced": args.reduced, "run_overrides": overrides}
+    results = []
+    if args.all:
+        meshes = (False,) if args.roofline else (False, True)
+        for arch in ARCH_IDS:
+            cfg = get_config(arch, reduced=args.reduced)
+            for shape in applicable_shapes(cfg):
+                for mp in meshes:
+                    try:
+                        results.append(runner(arch, shape.name,
+                                              multi_pod=mp, **kw))
+                    except Exception as e:  # noqa: BLE001
+                        print(f"[dryrun] {arch} x {shape.name} "
+                              f"mp={mp}: FAIL {type(e).__name__}: {e}")
+                        results.append({"arch": arch, "shape": shape.name,
+                                        "mesh": "2x16x16" if mp else "16x16",
+                                        "ok": False, "error": str(e)[:500]})
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all)")
+        results.append(runner(args.arch, args.shape,
+                              multi_pod=args.multi_pod, **kw))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    ok = all(r.get("ok") for r in results)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""PartitionSpec trees for parameters, optimizer state and step inputs.
+
+Rules (DESIGN.md Sec. 7), all with divisibility fallback:
+
+* Megatron TP on the model axis: column-parallel in-projections
+  (wq/wk/wv/wuq/gate/up/wz/wx/wdt), row-parallel out-projections
+  (wo/down/out); vocab-sharded embedding + head.
+* Optional FSDP: the *other* matrix dim additionally shards over
+  (pod, data) — required for >=90B params on 16 GB chips.
+* MoE: expert-parallel P(model, ...) when n_experts divides the axis
+  (dbrx, jamba), else TP-in-expert on d_ff (mixtral).
+* KV caches shard batch over data and kv-heads (or head_dim) over model.
+* ZeRO-1 optimizer state via repro.optim.adamw.zero1_state_specs.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import Shardings
+
+# leaves sharded on their LAST dim over `model`
+_COL = {"wq", "wk", "wv", "wuq", "wukv", "wdq", "wdkv", "wz", "wx", "wdt",
+        "gate", "up", "bq", "bk", "bv", "conv_x"}
+# leaves sharded on their FIRST (matrix) dim over `model`
+_ROW = {"wo", "down", "out"}
+# 1-D mamba per-head/inner vectors
+_VEC = {"A_log", "Dskip", "dt_bias", "norm"}
+# always replicated
+_REP = {"ln", "ln2", "q_ln", "kv_ln", "q_norm", "k_norm", "final_norm",
+        "router", "wkr", "wB", "wC", "conv_B", "conv_C"}
+
+
+def _path_names(path):
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+def param_specs(cfg, sh: Shardings, param_shapes, *, fsdp: bool = False,
+                decode2d: bool = False):
+    """Spec tree mirroring ``lm.init_params`` output.
+
+    ``decode2d`` (hillclimb, EXPERIMENTS.md Sec. Perf): weights become
+    fully *output-sharded* over the combined (pod, data, model) axes with
+    the contracting dim replicated — at decode the activations are tiny, so
+    gathering them (MBs) beats gathering FSDP weight shards (GBs/step).
+    """
+    if not sh.enabled:
+        return jax.tree.map(lambda _: P(), param_shapes)
+
+    combined = tuple([*(sh.batch_axes or ()), sh.model]) if decode2d else None
+
+    def out_axis(dim, name):
+        if decode2d and combined is not None:
+            ax = sh.maybe(combined, dim, name)
+            if ax is not None:
+                return ax
+        return sh.maybe(sh.model, dim, name)
+
+    def fs(dim):
+        """FSDP axis for the non-TP matrix dim."""
+        if not fsdp or decode2d:
+            return None
+        return sh.maybe(sh.batch_axes, dim, "fsdp")
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        in_groups = names and names[0] == "groups"
+        in_moe = "ffn" in names and cfg.n_experts > 0
+        shp = list(leaf.shape)
+        lead = []
+        if in_groups:          # stacked [G, ...]
+            lead = [None]
+            shp = shp[1:]
+
+        if name == "embed":
+            if decode2d:
+                return P(None, out_axis(shp[1], name))
+            return P(sh.maybe(sh.model, shp[0], name), fs(shp[1]))
+        if name == "lm_head":
+            return P(fs(shp[0]), out_axis(shp[1], name))
+
+        # MoE expert tensors are [E, d_in, d_out]; dense swiglu shares the
+        # leaf names but is rank-2 (after stripping the G stack) — jamba
+        # mixes both in one pattern, so discriminate by rank.
+        if in_moe and name in ("gate", "up", "down") and len(shp) == 3:
+            if cfg.moe_ep and shp[0] % sh.axis_size(sh.model) == 0:
+                if decode2d:
+                    # experts over model; col weights output-shard F over
+                    # data, row weight (down) contract-shards F over data
+                    if name in ("gate", "up"):
+                        return P(*lead, sh.model, None,
+                                 sh.maybe(sh.batch_axes, shp[2], name))
+                    return P(*lead, sh.model,
+                             sh.maybe(sh.batch_axes, shp[1], name), None)
+                return P(*lead, sh.model, fs(shp[1]), None)
+            if name in ("gate", "up"):
+                return P(*lead, None, fs(shp[1]), out_axis(shp[2], name))
+            if decode2d:
+                return P(*lead, None, out_axis(shp[1], name), None)
+            return P(*lead, None, sh.maybe(sh.model, shp[1], name), fs(shp[2]))
+
+        if name in _REP:
+            return P(*lead, *([None] * len(shp)))
+        if name in _VEC:
+            return P(*lead, sh.maybe(sh.model, shp[0], name))
+        if name in _COL:
+            if len(shp) == 1:   # bias
+                return P(*lead, out_axis(shp[0], name))
+            return P(*lead, fs(shp[0]), out_axis(shp[1], name))
+        if name in _ROW:
+            if decode2d:
+                # contract-dim sharded over the combined axes: the matmul
+                # partial-sums locally and all-reduces the tiny [B,1,D] out
+                return P(*lead, out_axis(shp[0], name), None)
+            return P(*lead, sh.maybe(sh.model, shp[0], name), fs(shp[1]))
+        # default: replicate
+        return P(*lead, *([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(rule, param_shapes)
+
+
+def batch_specs(cfg, sh: Shardings, batch_shapes):
+    """Specs for a step's ``batch`` dict."""
+    if not sh.enabled:
+        return jax.tree.map(lambda _: P(), batch_shapes)
+
+    def rule(path, leaf):
+        b = leaf.shape[0]
+        ba = sh.maybe(sh.batch_axes, b, "batch")
+        return P(ba, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_specs(cfg, sh: Shardings, cache_shapes):
+    """Decode caches: list per pattern position of stacked [G, ...] trees."""
+    if not sh.enabled:
+        return jax.tree.map(lambda _: P(), cache_shapes)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shp = leaf.shape     # [G, B, ...]
+        ba = sh.maybe(sh.batch_axes, shp[1], "cache batch")
+        if name in ("k", "v"):
+            # [G, B, S, Hkv, Dh]
+            if sh.decode_replicate:
+                # decode2d: shard the *sequence* — contractions against the
+                # cache partial-sum with tiny per-head stat reductions, and
+                # no tensor larger than the per-token activations moves
+                s = sh.maybe(sh.model, shp[2], "cache seq")
+                return P(None, ba, s, None, None)
+            h = sh.maybe(sh.model, shp[3], "cache kv heads")
+            d = None if h else sh.maybe(sh.model, shp[4], "cache head_dim")
+            return P(None, ba, None, h, d)
+        if name == "ckv":
+            if sh.decode_replicate:
+                return P(None, ba, sh.maybe(sh.model, shp[2], "latent seq"), None)
+            return P(None, ba, None, sh.maybe(sh.model, shp[3], "latent"))
+        if name == "kr":
+            if sh.decode_replicate:
+                return P(None, ba, sh.maybe(sh.model, shp[2], "rope seq"), None)
+            return P(None, ba, None, None)
+        if name == "ssm":
+            # [G, B, H, Pdim, N]
+            return P(None, ba, sh.maybe(sh.model, shp[2], "ssm heads"),
+                     None, None)
+        if name.startswith("conv"):
+            return P(None, ba, None, sh.maybe(sh.model, shp[3], "conv"))
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)

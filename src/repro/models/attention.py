@@ -1,0 +1,209 @@
+"""Attention: GQA self-attention, sliding-window, cross-attention, and the
+pure-JAX blocked (flash-style) implementation used on CPU and in the
+dry-run.  The Pallas kernel in ``repro.kernels.flash_attn`` implements the
+same online-softmax decomposition for TPU runtimes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def _flash_body(q, k, v, q_off, k_off, causal, window):
+    """One (q_chunk x k_chunk) online-softmax tile. All f32."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k)
+    cq, ck = q.shape[2], k.shape[2]
+    qpos = q_off + jnp.arange(cq)[:, None]
+    kpos = k_off + jnp.arange(ck)[None, :]
+    mask = jnp.ones((cq, ck), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    return jnp.where(mask, s, NEG_INF)
+
+
+def blocked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      q_chunk: int = 512, k_chunk: int = 1024,
+                      scale: float | None = None, unroll: bool = False,
+                      score_dtype=jnp.float32):
+    """Flash-style attention in pure jnp (XLA path).
+
+    q: [B, H, Sq, D]; k/v: [B, H, Sk, D].  Memory is O(q_chunk * k_chunk)
+    per tile instead of O(Sq * Sk).
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    dv = v.shape[-1]            # value head dim may differ (MLA)
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    while sq % q_chunk:
+        q_chunk //= 2
+    while sk % k_chunk:
+        k_chunk //= 2
+    nq, nk = sq // q_chunk, sk // k_chunk
+    scale = scale if scale is not None else d ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, h, nq, q_chunk, d)
+    kf = k.astype(jnp.float32).reshape(b, h, nk, k_chunk, d)
+    vf = v.astype(jnp.float32).reshape(b, h, nk, k_chunk, dv)
+    q_base = sk - sq   # align ends (supports decode-style shorter q)
+
+    def per_q(qi, qblk):
+        m = jnp.full((b, h, q_chunk, 1), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, h, q_chunk, 1), jnp.float32)
+        acc = jnp.zeros((b, h, q_chunk, dv), jnp.float32)
+
+        def body(ki, carry):
+            m, l, acc = carry
+            s = _flash_body(qblk, kf[:, :, ki], vf[:, :, ki],
+                            q_base + qi * q_chunk, ki * k_chunk, causal, window)
+            # score_dtype=bf16 halves the HBM traffic of the two largest
+            # intermediates (scores + probs); softmax stats stay f32
+            s = s.astype(score_dtype)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True)
+                                .astype(jnp.float32))
+            p = jnp.exp(s.astype(jnp.float32) - m_new).astype(score_dtype)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p.astype(jnp.float32), axis=-1,
+                                        keepdims=True)
+            acc_new = alpha * acc + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(jnp.float32), vf[:, :, ki])
+            return m_new, l_new, acc_new
+
+        if unroll:
+            carry = (m, l, acc)
+            for ki in range(nk):
+                carry = body(ki, carry)
+            m, l, acc = carry
+        else:
+            m, l, acc = jax.lax.fori_loop(0, nk, body, (m, l, acc))
+        return acc / jnp.maximum(l, 1e-30)
+
+    if unroll:
+        out = jnp.stack([per_q(qi, qf[:, :, qi]) for qi in range(nq)])
+    else:
+        def scan_body(_, qi):
+            return None, per_q(qi, qf[:, :, qi])
+
+        _, out = jax.lax.scan(scan_body, None, jnp.arange(nq))
+    # out: [nq, B, H, q_chunk, Dv] -> [B, H, Sq, Dv]
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, sq, dv)
+    return out.astype(q.dtype)
+
+
+def gqa(q, k, v, **kw):
+    """Broadcast kv heads then run blocked attention.  q [B,S,H,D] layout."""
+    hq, hkv = q.shape[2], k.shape[2]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if hq != hkv:
+        rep = hq // hkv
+        kt = jnp.repeat(kt, rep, axis=1)
+        vt = jnp.repeat(vt, rep, axis=1)
+    out = blocked_attention(qt, kt, vt, **kw)
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention(q1, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-token decode: q1 [B, 1, H, D]; caches [B, S, Hkv, D];
+    cache_len i32[B] = valid prefix length (includes the new token).
+
+    The caches are consumed in their storage dtype with f32 accumulation
+    (``preferred_element_type``) — materializing an f32 copy of a 32k-500k
+    token cache would double HBM traffic and, under SPMD, strip the cache's
+    sharding right before the contraction (EXPERIMENTS.md Sec. Perf)."""
+    b, s, hkv, d = k_cache.shape
+    hq = q1.shape[2]
+    rep = hq // hkv
+    q = (q1[:, 0].astype(jnp.float32) * (d ** -0.5)).astype(k_cache.dtype)
+    # bf16 dots accumulate in f32 inside XLA; explicit f32 outputs on bf16
+    # operands are rejected by the CPU runtime, so cast after the einsum.
+    if rep > 1:
+        qr = q.reshape(b, hkv, rep, d)
+        s_ = jnp.einsum("bgrd,bsgd->bgrs", qr, k_cache).astype(jnp.float32)
+        s_ = s_.reshape(b, hq, s)
+    else:
+        s_ = jnp.einsum("bhd,bshd->bhs", q, k_cache).astype(jnp.float32)
+    pos = jnp.arange(s)[None, None, :]
+    mask = pos < cache_len[:, None, None]
+    if window > 0:
+        mask &= pos >= cache_len[:, None, None] - window
+    s_ = jnp.where(mask, s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1).astype(v_cache.dtype)
+    if rep > 1:
+        pr = p.reshape(b, hkv, rep, s)
+        out = jnp.einsum("bgrs,bsgd->bgrd", pr, v_cache
+                         ).astype(jnp.float32).reshape(b, hq, d)
+    else:
+        out = jnp.einsum("bhs,bshd->bhd", p, v_cache).astype(jnp.float32)
+    return out[:, None].astype(q1.dtype)                     # [B, 1, H, D]
+
+
+# ---------------------------------------------------------------------------
+# parameter init / apply for a GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, cross: bool = False):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": L.dense_init(ks[0], d, hq * dh),
+        "wk": L.dense_init(ks[1], d, hkv * dh),
+        "wv": L.dense_init(ks[2], d, hkv * dh),
+        "wo": L.dense_init(ks[3], hq * dh, d, scale=(hq * dh) ** -0.5),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((hq * dh,), L.PARAM_DTYPE)
+        p["bk"] = jnp.zeros((hkv * dh,), L.PARAM_DTYPE)
+        p["bv"] = jnp.zeros((hkv * dh,), L.PARAM_DTYPE)
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(dh)
+        p["k_norm"] = L.rmsnorm_init(dh)
+    return p
+
+
+def attn_qkv(p, cfg, x, kv_src, positions, sh):
+    """Project to q, k, v (RoPE'd, normed). kv_src = x (self) or cross feed."""
+    b = x.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = x @ p["wq"]
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(*x.shape[:-1], hq, dh)
+    k = k.reshape(*kv_src.shape[:-1], hkv, dh)
+    v = v.reshape(*kv_src.shape[:-1], hkv, dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k = L.rmsnorm(k, p["k_norm"], cfg.rms_eps)
+    if positions is not None:
+        cos, sin = L.rope_freqs(dh, cfg.rope_theta, positions)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    if sh is not None:
+        q, k, v = sh.constrain_heads(q), sh.constrain_heads(k), sh.constrain_heads(v)
+    return q, k, v
+
+
+def attn_apply(p, cfg, x, positions, sh, *, cross_feed=None):
+    """Full attention block body (no residual/norm — the caller owns those)."""
+    sdt = jnp.bfloat16 if cfg.attn_bf16 else jnp.float32
+    if cross_feed is not None:
+        q, k, v = attn_qkv(p, cfg, x, cross_feed, None, sh)
+        out = gqa(q, k, v, causal=False, score_dtype=sdt,
+                  q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, unroll=cfg.unroll)
+    else:
+        q, k, v = attn_qkv(p, cfg, x, x, positions, sh)
+        out = gqa(q, k, v, causal=True, window=cfg.sliding_window,
+                  score_dtype=sdt,
+                  q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, unroll=cfg.unroll)
+    out = out.reshape(*x.shape[:-1], cfg.n_heads * cfg.head_dim_)
+    return out @ p["wo"]

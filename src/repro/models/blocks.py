@@ -1,0 +1,104 @@
+"""Decoder layers: dispatch over (mixer, ffn) kinds + scan-over-groups.
+
+Depth is organized as ``pattern x repeats``: parameters for each position in
+the pattern are stacked across repetitions and the stack is consumed by one
+``lax.scan`` (compile time O(|pattern|), memory O(1) layers live), with
+``jax.checkpoint`` around the scan body for activation rematerialization.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models.config import (FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_ATTN,
+                                 MIXER_CROSS, MIXER_MAMBA, LayerSpec)
+
+
+def layer_init(key, cfg, spec: LayerSpec):
+    k1, k2 = jax.random.split(key)
+    p = {"ln": L.rmsnorm_init(cfg.d_model)}
+    if spec.mixer in (MIXER_ATTN, MIXER_CROSS):
+        if cfg.mla is not None:
+            p["mixer"] = MLA.mla_init(k1, cfg)
+        else:
+            p["mixer"] = A.attn_init(k1, cfg, cross=spec.mixer == MIXER_CROSS)
+    elif spec.mixer == MIXER_MAMBA:
+        p["mixer"] = M.mamba_init(k1, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn != FFN_NONE:
+        p["ln2"] = L.rmsnorm_init(cfg.d_model)
+        p["ffn"] = (MOE.moe_init(k2, cfg) if spec.ffn == FFN_MOE
+                    else L.swiglu_init(k2, cfg.d_model, cfg.d_ff))
+    return p
+
+
+def layer_apply(p, cfg, spec: LayerSpec, x, positions, sh, cross_feed=None):
+    """Training/eval forward for one layer.  Returns (x, aux_loss)."""
+    h = L.rmsnorm(x, p["ln"], cfg.rms_eps)
+    if spec.mixer == MIXER_CROSS:
+        mix = A.attn_apply(p["mixer"], cfg, h, None, sh, cross_feed=cross_feed)
+    elif spec.mixer == MIXER_ATTN:
+        if cfg.mla is not None:
+            mix = MLA.mla_apply(p["mixer"], cfg, h, positions, sh)
+        else:
+            mix = A.attn_apply(p["mixer"], cfg, h, positions, sh)
+    else:
+        mix = M.mamba_apply(p["mixer"], cfg, h, sh)
+    x = x + mix
+    if sh is not None:
+        x = sh.constrain_act(x)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn != FFN_NONE:
+        h2 = L.rmsnorm(x, p["ln2"], cfg.rms_eps)
+        if spec.ffn == FFN_MOE:
+            out, aux = MOE.moe_apply(p["ffn"], cfg, h2, sh)
+        else:
+            out = L.swiglu(p["ffn"], h2, sh)
+        x = x + out
+        if sh is not None:
+            x = sh.constrain_act(x)
+    return x, aux
+
+
+def stack_init(key, cfg):
+    """Init the full depth: list over pattern positions, each stacked [G, ...]."""
+    G = cfg.repeats
+    groups = []
+    for i, spec in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), G)
+        stacked = jax.vmap(lambda k: layer_init(k, cfg, spec))(keys)
+        groups.append(stacked)
+    return groups
+
+
+def stack_apply(groups, cfg, x, positions, sh, cross_feed=None,
+                remat: bool = True):
+    """Scan over repetitions; each body runs one full pattern."""
+
+    def body(x, group_slice):
+        aux = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(cfg.pattern):
+            x, a = layer_apply(group_slice[i], cfg, spec, x, positions, sh,
+                               cross_feed=cross_feed)
+            aux = aux + a
+        return x, aux
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    if cfg.unroll:
+        aux = jnp.zeros((), jnp.float32)
+        for r in range(cfg.repeats):
+            x, a = body(x, jax.tree.map(lambda t: t[r], groups))
+            aux = aux + a
+        return x, aux
+
+    x, auxs = jax.lax.scan(lambda c, g: body(c, g), x, groups)
+    return x, jnp.sum(auxs)

@@ -1,0 +1,74 @@
+"""Shared neural-net building blocks (pure JAX, dict-pytree parameters)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, d_in, d_out, scale=None, dtype=PARAM_DTYPE):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions: i32[...S] -> (cos, sin) [..., S, head_dim/2] f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., S, H, D]; cos/sin: [..., S, D/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def swiglu_init(key, d_model, d_ff, dtype=PARAM_DTYPE):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(params, x, sh=None):
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    if sh is not None:
+        h = sh.constrain_ffn(h)
+    return h @ params["down"]
+
+
+def embed_init(key, vocab, d_model, dtype=PARAM_DTYPE):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits [B,S,V] (any float dtype), labels i32 [B,S] -> mean nll."""
+    logits = logits.astype(jnp.float32)
+    m = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(m, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

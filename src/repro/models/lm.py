@@ -1,0 +1,273 @@
+"""Full language model: embedding/frontend -> layer stack -> head, plus the
+serving paths (prefill with cache emission, single-token decode).
+
+Inputs are a dict batch:
+  tokens  i32[B, S]          (frontend="tokens")
+  embeds  f[B, S, D]         (frontend="embeddings": musicgen frames /
+                              VLM patch stub — see DESIGN.md Sec. 5)
+  cross   f[B, Sk, D]        (VLM cross-attention context, stub embeddings)
+  labels  i32[B, S]          (training; -1 = masked)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import mla as MLA
+from repro.models.config import (FFN_NONE, MIXER_ATTN, MIXER_CROSS,
+                                 MIXER_MAMBA, ModelConfig)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4)
+    params = {"groups": B.stack_init(ks[0], cfg),
+              "final_norm": L.rmsnorm_init(cfg.d_model)}
+    if cfg.frontend == "tokens":
+        params["embed"] = L.embed_init(ks[1], cfg.padded_vocab, cfg.d_model)
+    if not cfg.tie_embeddings or cfg.frontend != "tokens":
+        params["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.padded_vocab,
+                                         scale=0.02)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+
+def _frontend(params, cfg, batch, sh):
+    if cfg.frontend == "tokens":
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["embeds"].astype(L.PARAM_DTYPE)
+    if sh is not None:
+        x = sh.constrain_act(x)
+    return x
+
+
+def _head(params, cfg, x, sh):
+    if "lm_head" in params:
+        logits = x @ params["lm_head"]
+    else:
+        logits = x @ params["embed"].T
+    if sh is not None:
+        logits = sh.constrain_logits(logits)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, batch, sh=None, remat: bool = True):
+    """Returns (logits f32[B, S, Vpad], aux_loss)."""
+    x = _frontend(params, cfg, batch, sh)
+    bsz, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+    cross = batch.get("cross")
+    if cross is not None:
+        cross = cross.astype(x.dtype)
+    x, aux = B.stack_apply(params["groups"], cfg, x, positions, sh,
+                           cross_feed=cross, remat=remat)
+    x = L.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    return _head(params, cfg, x, sh), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, sh=None, remat: bool = True,
+            aux_weight: float = 0.01):
+    logits, aux = forward(params, cfg, batch, sh, remat)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = L.cross_entropy(logits, jnp.maximum(labels, 0), mask)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Per-pattern-position caches, stacked over repetitions [G, ...]."""
+    G = cfg.repeats
+    caches = []
+    for spec in cfg.pattern:
+        if spec.mixer == MIXER_MAMBA:
+            c = M.mamba_init_cache(cfg, batch, jnp.float32)
+        elif spec.mixer == MIXER_CROSS:
+            dh = cfg.head_dim_
+            c = {"k": jnp.zeros((batch, cfg.cross_kv_len, cfg.n_kv_heads, dh), dtype),
+                 "v": jnp.zeros((batch, cfg.cross_kv_len, cfg.n_kv_heads, dh), dtype)}
+        elif cfg.mla is not None:
+            m = cfg.mla
+            c = {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                 "kr": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype)}
+        else:
+            dh = cfg.head_dim_
+            c = {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+                 "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype)}
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (G,) + a.shape), c))
+    return caches
+
+
+def _attn_decode_layer(p, cfg, spec, x1, positions, cache, cache_len, sh,
+                       cross_feed=None):
+    """One layer, one token.  Returns (x1, new_cache)."""
+    h = L.rmsnorm(x1, p["ln"], cfg.rms_eps)
+    if sh is not None:
+        h = sh.constrain_dec(h)
+    if spec.mixer == MIXER_MAMBA:
+        mix, cache = M.mamba_decode(p["mixer"], cfg, h, cache, sh)
+    elif spec.mixer == MIXER_CROSS:
+        q, _, _ = A.attn_qkv(p["mixer"], cfg, h, h, None, sh)
+        kc, vc = cache["k"], cache["v"]
+        clen = jnp.full((x1.shape[0],), kc.shape[1], jnp.int32)
+        out = A.decode_attention(q, kc, vc, clen)
+        out = out.reshape(*x1.shape[:-1], cfg.n_heads * cfg.head_dim_)
+        if sh is not None:
+            out = sh.constrain_ffn(out)   # contract-dim layout for wo
+        mix = out @ p["mixer"]["wo"]
+    elif cfg.mla is not None:
+        mix, ckv, kr = MLA.mla_decode(p["mixer"], cfg, h, positions,
+                                      cache["ckv"], cache["kr"], cache_len)
+        cache = {"ckv": ckv, "kr": kr}
+    else:
+        q, k, v = A.attn_qkv(p["mixer"], cfg, h, h, positions, sh)
+        idx = cache_len[:, None] - 1
+        upd = lambda c, val: jax.vmap(
+            lambda cb, ib, vb: jax.lax.dynamic_update_slice(
+                cb, vb.astype(cb.dtype), (ib[0], 0, 0)))(c, idx, val)
+        kc, vc = upd(cache["k"], k), upd(cache["v"], v)
+        out = A.decode_attention(q, kc, vc, cache_len,
+                                 window=cfg.sliding_window)
+        out = out.reshape(*x1.shape[:-1], cfg.n_heads * cfg.head_dim_)
+        if sh is not None:
+            out = sh.constrain_ffn(out)   # contract-dim layout for wo
+        mix = out @ p["mixer"]["wo"]
+        cache = {"k": kc, "v": vc}
+    x1 = x1 + mix
+    if spec.ffn != FFN_NONE:
+        h2 = L.rmsnorm(x1, p["ln2"], cfg.rms_eps)
+        if sh is not None:
+            h2 = sh.constrain_dec(h2)
+        if spec.ffn == "moe":
+            from repro.models import moe as MOE
+            out, _ = MOE.moe_apply(p["ffn"], cfg, h2, sh)
+        else:
+            out = L.swiglu(p["ffn"], h2, sh)
+        x1 = x1 + out
+    return x1, cache
+
+
+def decode_step(params, cfg: ModelConfig, batch, caches, cache_len, sh=None):
+    """One new token against existing caches.
+
+    batch: tokens i32[B, 1] or embeds [B, 1, D]; cache_len i32[B] = prefix
+    length including this token.  Returns (logits [B, 1, Vpad], caches').
+    """
+    x = _frontend(params, cfg, batch, sh)
+    positions = (cache_len - 1)[:, None]
+
+    def body(x, slices):
+        group_slice, cache_slice = slices
+        new_caches = []
+        for i, spec in enumerate(cfg.pattern):
+            x, c = _attn_decode_layer(group_slice[i], cfg, spec, x,
+                                      positions, cache_slice[i], cache_len, sh)
+            new_caches.append(c)
+        return x, new_caches
+
+    if cfg.unroll:
+        outs = []
+        for r in range(cfg.repeats):
+            x, c = body(x, jax.tree.map(lambda t: t[r], (params["groups"], caches)))
+            outs.append(c)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["groups"], caches))
+    x = L.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    return _head(params, cfg, x, sh), new_caches
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int, sh=None,
+            remat: bool = False):
+    """Process a prompt, returning (logits, caches, cache_len).
+
+    Caches are allocated at ``max_len``; attention caches carry the prompt
+    K/V; mamba caches carry the final SSM/conv states.
+
+    ``remat`` defaults to False: there is no backward pass, so checkpoint
+    wrappers only obstruct GSPMD constraint propagation (measured: a
+    spurious 7.5 GiB/layer expert-tensor all-gather — EXPERIMENTS.md
+    Sec. Perf).
+    """
+    x = _frontend(params, cfg, batch, sh)
+    bsz, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+    cross = batch.get("cross")
+    if cross is not None:
+        cross = cross.astype(x.dtype)
+
+    def body(x, group_slice):
+        new_caches = []
+        for i, spec in enumerate(cfg.pattern):
+            p = group_slice[i]
+            h = L.rmsnorm(x, p["ln"], cfg.rms_eps)
+            if spec.mixer == MIXER_MAMBA:
+                mix, cache = M.mamba_apply(p["mixer"], cfg, h, sh,
+                                           return_state=True)
+            elif spec.mixer == MIXER_CROSS:
+                mix = A.attn_apply(p["mixer"], cfg, h, None, sh,
+                                   cross_feed=cross)
+                _, k, v = A.attn_qkv(p["mixer"], cfg, cross, cross, None, sh)
+                cache = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+            elif cfg.mla is not None:
+                mix = MLA.mla_apply(p["mixer"], cfg, h, positions, sh)
+                ckv, kr = MLA.mla_latents(p["mixer"], cfg, h, positions)
+                pad = max_len - s
+                cache = {"ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16),
+                         "kr": jnp.pad(kr[:, :, 0, :], ((0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16)}
+            else:
+                q, k, v = A.attn_qkv(p["mixer"], cfg, h, h, positions, sh)
+                mix = A.gqa(q, k, v, causal=True, window=cfg.sliding_window,
+                            q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+                mix = mix.reshape(*x.shape[:-1], cfg.n_heads * cfg.head_dim_)
+                mix = mix @ p["mixer"]["wo"]
+                pad = max_len - s
+                cache = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16),
+                         "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)}
+            x = x + mix
+            if spec.ffn != FFN_NONE:
+                h2 = L.rmsnorm(x, p["ln2"], cfg.rms_eps)
+                if spec.ffn == "moe":
+                    from repro.models import moe as MOE
+                    out, _ = MOE.moe_apply(p["ffn"], cfg, h2, sh)
+                else:
+                    out = L.swiglu(p["ffn"], h2, sh)
+                x = x + out
+            if sh is not None:
+                x = sh.constrain_act(x)
+            new_caches.append(cache)
+        return x, new_caches
+
+    if remat:
+        body = jax.checkpoint(body)
+    if cfg.unroll:
+        outs = []
+        for r in range(cfg.repeats):
+            x, c = body(x, jax.tree.map(lambda t: t[r], params["groups"]))
+            outs.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, caches = jax.lax.scan(body, x, params["groups"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    cache_len = jnp.full((bsz,), s, jnp.int32)
+    return _head(params, cfg, x[:, -1:], sh), caches, cache_len

@@ -1,0 +1,175 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Projections are kept *separate* (wz/wx/wB/wC/wdt rather than one fused
+in_proj) so each shards independently on the model axis without slicing a
+sharded dimension; B/C are group-shared and replicated (they are tiny and
+every head shard needs them).
+
+Training/prefill uses the chunked SSD decomposition (`ssd_jnp`, identical
+math to the Pallas kernel); decode updates the [H, P, N] state recurrently.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ops import ssd_jnp_with_state
+from repro.models import layers as L
+
+
+def mamba_init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": L.dense_init(ks[0], d, di),
+        "wx": L.dense_init(ks[1], d, di),
+        "wB": L.dense_init(ks[2], d, gn),
+        "wC": L.dense_init(ks[3], d, gn),
+        "wdt": L.dense_init(ks[4], d, h),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "Dskip": jnp.ones((h,), jnp.float32),
+        "conv_x": (jax.random.normal(ks[5], (s.conv_kernel, di), jnp.float32)
+                   * (s.conv_kernel * di) ** -0.5).astype(L.PARAM_DTYPE),
+        "conv_B": (jax.random.normal(ks[6], (s.conv_kernel, gn), jnp.float32)
+                   * (s.conv_kernel * gn) ** -0.5).astype(L.PARAM_DTYPE),
+        "conv_C": (jax.random.normal(ks[7], (s.conv_kernel, gn), jnp.float32)
+                   * (s.conv_kernel * gn) ** -0.5).astype(L.PARAM_DTYPE),
+        "norm": L.rmsnorm_init(di),
+        "out": L.dense_init(jax.random.fold_in(key, 99), di, d, scale=di ** -0.5),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x [B, S, C], w [K, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mamba_apply(p, cfg, x, sh=None, return_state: bool = False):
+    """x: [B, S, D] -> [B, S, D] (optionally also the decode cache)."""
+    s = cfg.ssm
+    b, sl, d = x.shape
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    pdim = s.head_dim
+    n = s.d_state
+    g = s.n_groups
+
+    z = x @ p["wz"]
+    x_pre, B_pre, C_pre = x @ p["wx"], x @ p["wB"], x @ p["wC"]
+    xs = jax.nn.silu(_causal_conv(x_pre, p["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(B_pre, p["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(C_pre, p["conv_C"]))
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    if sh is not None:
+        xs = sh.constrain_ffn(xs)
+        z = sh.constrain_ffn(z)
+
+    A = -jnp.exp(p["A_log"])                                  # [H] negative
+    loga = dt * A                                             # [B, S, H]
+    xh = xs.reshape(b, sl, h, pdim)
+    xbar = xh * dt[..., None]
+
+    # expand groups to heads (GVA-style sharing)
+    rep = h // g
+    Bh = jnp.repeat(Bm.reshape(b, sl, g, n), rep, axis=2)
+    Ch = jnp.repeat(Cm.reshape(b, sl, g, n), rep, axis=2)
+
+    # pad to a chunk multiple: x=0 contributes nothing; loga=0 (decay 1)
+    # leaves the carried state untouched, so the final state stays exact
+    chunk = min(s.chunk, sl)
+    pad = (-sl) % chunk
+    slp = sl + pad
+
+    # [B, S, H, *] -> [B*H, S, *] for the SSD core
+    def to_bh(t):
+        t = jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return t.transpose(0, 2, 1, 3).reshape(b * h, slp, t.shape[-1])
+
+    loga_p = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_jnp_with_state(
+        to_bh(xbar), loga_p.transpose(0, 2, 1).reshape(b * h, slp),
+        to_bh(Bh), to_bh(Ch), chunk=chunk)
+    y = y.reshape(b, h, slp, pdim)[:, :, :sl].transpose(0, 2, 1, 3)  # [B, S, H, P]
+    y = y + xh.astype(jnp.float32) * p["Dskip"][None, None, :, None]
+    y = y.reshape(b, sl, di).astype(x.dtype)
+
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    out = y @ p["out"]
+    if not return_state:
+        return out
+    k = s.conv_kernel - 1
+    cache = {
+        # ssd state comes back [BH, N, P] -> decode layout [B, H, P, N]
+        "ssm": state.reshape(b, h, n, pdim).transpose(0, 1, 3, 2),
+        "conv_x": x_pre[:, -k:].astype(jnp.float32),
+        "conv_B": B_pre[:, -k:].astype(jnp.float32),
+        "conv_C": C_pre[:, -k:].astype(jnp.float32),
+    }
+    return out, cache
+
+
+def mamba_init_cache(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, h, gn = s.d_inner(d), s.n_heads(d), s.n_groups * s.d_state
+    return {
+        "ssm": jnp.zeros((batch, h, s.head_dim, s.d_state), dtype),
+        "conv_x": jnp.zeros((batch, s.conv_kernel - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, s.conv_kernel - 1, gn), dtype),
+        "conv_C": jnp.zeros((batch, s.conv_kernel - 1, gn), dtype),
+    }
+
+
+def _conv_step(cache, x1, w):
+    """cache [B, K-1, C], x1 [B, C] -> (new_cache, out [B, C])."""
+    k = w.shape[0]
+    hist = jnp.concatenate([cache, x1[:, None]], axis=1)      # [B, K, C]
+    out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return hist[:, 1:], out.astype(x1.dtype)
+
+
+def mamba_decode(p, cfg, x1, cache, sh=None):
+    """Single-token step. x1: [B, 1, D]."""
+    s = cfg.ssm
+    b, _, d = x1.shape
+    h = s.n_heads(d)
+    pdim, n, g = s.head_dim, s.d_state, s.n_groups
+    x0 = x1[:, 0]
+
+    z = x0 @ p["wz"]
+    cache_cx, xs = _conv_step(cache["conv_x"], x0 @ p["wx"], p["conv_x"])
+    cache_cb, Bm = _conv_step(cache["conv_B"], x0 @ p["wB"], p["conv_B"])
+    cache_cc, Cm = _conv_step(cache["conv_C"], x0 @ p["wC"], p["conv_C"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus((x0 @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])  # [B,H]
+
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                       # [B, H]
+    xh = xs.reshape(b, h, pdim).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+    rep = h // g
+    Bh = jnp.repeat(Bm.reshape(b, g, n), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(b, g, n), rep, axis=1).astype(jnp.float32)
+
+    S = cache["ssm"] * a[..., None, None] + \
+        jnp.einsum("bhp,bhn->bhpn", xbar, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", S, Ch)
+    y = y + xh * p["Dskip"][None, :, None]
+    y = y.reshape(b, s.d_inner(d)).astype(x1.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    new_cache = {"ssm": S, "conv_x": cache_cx, "conv_B": cache_cb,
+                 "conv_C": cache_cc}
+    return (y @ p["out"])[:, None], new_cache

@@ -1,0 +1,122 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Queries and KV are low-rank compressed; only the latent ``c_kv`` (plus a
+shared single-head RoPE key) needs caching at decode time — the KV cache
+shrinks by ~an order of magnitude versus GQA.  The decode path uses the
+*absorbed* formulation (attention runs directly in latent space) so cached
+latents are never re-expanded.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.attention import blocked_attention
+
+NEG_INF = -1e30
+
+
+def mla_init(key, cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wdq": L.dense_init(ks[0], d, m.q_lora_rank),
+        "q_ln": L.rmsnorm_init(m.q_lora_rank),
+        "wuq": L.dense_init(ks[1], m.q_lora_rank, h * qk),
+        "wdkv": L.dense_init(ks[2], d, m.kv_lora_rank),
+        "kv_ln": L.rmsnorm_init(m.kv_lora_rank),
+        "wukv": L.dense_init(ks[3], m.kv_lora_rank,
+                             h * (m.qk_nope_dim + m.v_head_dim)),
+        "wkr": L.dense_init(ks[4], d, m.qk_rope_dim),
+        "wo": L.dense_init(ks[5], h * m.v_head_dim, d,
+                           scale=(h * m.v_head_dim) ** -0.5),
+    }
+
+
+def mla_latents(p, cfg, x, positions):
+    """Compressed latents: c_kv [B,S,R], k_rope [B,S,1,Dr] (RoPE'd)."""
+    m = cfg.mla
+    c_kv = L.rmsnorm(x @ p["wdkv"], p["kv_ln"], cfg.rms_eps)
+    k_rope = (x @ p["wkr"]).reshape(*x.shape[:-1], 1, m.qk_rope_dim)
+    cos, sin = L.rope_freqs(m.qk_rope_dim, cfg.rope_theta, positions)
+    k_rope = L.apply_rope(k_rope, cos, sin)
+    return c_kv, k_rope
+
+
+def mla_queries(p, cfg, x, positions):
+    """q_nope [B,S,H,Dn], q_rope [B,S,H,Dr]."""
+    m = cfg.mla
+    h = cfg.n_heads
+    q = L.rmsnorm(x @ p["wdq"], p["q_ln"], cfg.rms_eps) @ p["wuq"]
+    q = q.reshape(*x.shape[:-1], h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    cos, sin = L.rope_freqs(m.qk_rope_dim, cfg.rope_theta, positions)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_apply(p, cfg, x, positions, sh=None):
+    """Training/prefill path: expand latents to per-head K/V, run blocked
+    attention on the concatenated (nope | rope) head dims."""
+    m = cfg.mla
+    h = cfg.n_heads
+    q_nope, q_rope = mla_queries(p, cfg, x, positions)
+    c_kv, k_rope = mla_latents(p, cfg, x, positions)
+    kv = (c_kv @ p["wukv"]).reshape(*x.shape[:-1], h, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:-1], m.qk_rope_dim))],
+        axis=-1)
+    if sh is not None:
+        q, k, v = sh.constrain_heads(q), sh.constrain_heads(k), sh.constrain_heads(v)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    out = blocked_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=True,
+                            q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk,
+                            scale=scale, unroll=cfg.unroll)
+    out = out.transpose(0, 2, 1, 3).reshape(*x.shape[:-1], h * m.v_head_dim)
+    return out @ p["wo"]
+
+
+def mla_decode(p, cfg, x1, positions, ckv_cache, krope_cache, cache_len):
+    """Absorbed-matrix decode: attention in latent space.
+
+    x1: [B, 1, D]; ckv_cache: [B, S, R]; krope_cache: [B, S, Dr];
+    cache_len i32[B] (length *after* inserting this token's latent).
+    Returns ([B, 1, D], updated caches).
+    """
+    m = cfg.mla
+    h = cfg.n_heads
+    b = x1.shape[0]
+    q_nope, q_rope = mla_queries(p, cfg, x1, positions)      # [B,1,H,*]
+    c_kv, k_rope = mla_latents(p, cfg, x1, positions)        # [B,1,R],[B,1,1,Dr]
+
+    idx = cache_len[:, None] - 1
+    ckv_cache = jax.vmap(lambda c, i, v: jax.lax.dynamic_update_slice(c, v, (i[0], 0)))(
+        ckv_cache, idx, c_kv)
+    krope_cache = jax.vmap(lambda c, i, v: jax.lax.dynamic_update_slice(c, v, (i[0], 0)))(
+        krope_cache, idx, k_rope[:, :, 0, :])
+
+    # absorb W_uk into the query:  q_lat [B,H,R]
+    wukv = p["wukv"].reshape(m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim)
+    w_uk = wukv[..., :m.qk_nope_dim]                         # [R, H, Dn]
+    w_uv = wukv[..., m.qk_nope_dim:]                         # [R, H, Dv]
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, ckv_cache.astype(jnp.float32))
+    scores += jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                         krope_cache.astype(jnp.float32))
+    scores *= (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    pos = jnp.arange(ckv_cache.shape[1])[None, None, :]
+    scores = jnp.where(pos < cache_len[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_cache.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhd->bhd", lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x1.dtype)
+    return out @ p["wo"], ckv_cache, krope_cache

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts: token-choice top-k routing with GShard-style
+capacity-bounded einsum dispatch (GSPMD-friendly: the dispatch/combine
+tensors shard cleanly over either the expert axis (EP) or the hidden axis
+(TP-in-expert)).
+
+Expert-parallel sharding emits the alltoall traffic pattern the paper
+studies in Sec. 4.5 — the collectives bridge (repro.collectives) maps it
+onto the netsim alltoall workload.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def moe_init(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+
+    def experts(k, d_in, d_out, scale):
+        return (jax.random.normal(k, (e, d_in, d_out), jnp.float32)
+                * scale).astype(L.PARAM_DTYPE)
+
+    return {
+        "router": L.dense_init(ks[0], d, e, scale=0.02, dtype=jnp.float32),
+        "gate": experts(ks[1], d, f, scale_in),
+        "up": experts(ks[2], d, f, scale_in),
+        "down": experts(ks[3], f, d, scale_out),
+    }
+
+
+def moe_apply(p, cfg, x, sh=None):
+    """x: [B, S, D] -> [B, S, D] plus auxiliary load-balancing loss."""
+    if cfg.moe_sorted:
+        return moe_apply_sorted(p, cfg, x, sh)
+    if cfg.moe_local_chunks > 1 and x.shape[1] % cfg.moe_local_chunks == 0:
+        return moe_apply_local(p, cfg, x, sh)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, -(-int(cfg.capacity_factor * s * k) // e))   # ceil
+
+    logits = x.astype(jnp.float32) @ p["router"]             # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # [B, S, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, choice) within its expert's buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # [B, S, K, E]
+    flat = onehot.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # [B, S*K, E]
+    pos = pos.reshape(b, s, k, e)
+    keep = (pos < cap) * onehot                              # drop overflow
+    pos_cap = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+
+    # dispatch [B, S, E, C] / combine weights.  bf16 mode (hillclimb):
+    # the [B,S,K,E,C] one-hots are the layer's largest tensors and 0/1 is
+    # exactly representable — build them *directly* in bf16 (a cast after
+    # an f32 one_hot leaves the dominant f32 buffer in the profile).
+    ddt = jnp.bfloat16 if cfg.moe_bf16 else jnp.float32
+    oh_cap = jax.nn.one_hot(pos_cap, cap, dtype=ddt)         # [B, S, K, E, C]
+    disp = (keep.astype(ddt)[..., None] * oh_cap).sum(axis=2)
+    comb = ((keep * gate_vals[..., None]).astype(ddt)[..., None] * oh_cap
+            ).sum(axis=2)                                    # [B, S, E, C]
+
+    # NB: bf16 x bf16 dots accumulate in f32 inside XLA; an explicit
+    # preferred_element_type=f32 is unsupported by the CPU runtime.
+    xe = jnp.einsum("bsec,bsd->ebcd", disp, x.astype(ddt))   # [E,B,C,D]
+    xe = xe.astype(x.dtype)
+    if sh is not None and sh.enabled:
+        espec = sh.maybe(sh.model, e, "moe experts") if cfg.moe_ep else None
+        xe = sh.constrain(xe, jax.sharding.PartitionSpec(espec, sh.batch, None, None))
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, p["gate"])) * \
+        jnp.einsum("ebcd,edf->ebcf", xe, p["up"])
+    ye = jnp.einsum("ebcf,efd->ebcd", h, p["down"])          # [E, B, C, D]
+    y = jnp.einsum("bsec,ebcd->bsd", comb, ye.astype(ddt)).astype(jnp.float32)
+
+    # auxiliary load-balance loss (Switch-style)
+    me = jnp.mean(onehot.sum(axis=2).reshape(-1, e), axis=0)
+    pe = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux = e * jnp.sum(me * pe)
+    return y.astype(x.dtype), aux
+
+
+def moe_apply_local(p, cfg, x, sh=None):
+    """Local-capacity routing (hillclimb, EXPERIMENTS.md Sec. Perf cell B).
+
+    With sequence-parallel activations, the global capacity cumsum spans
+    the model-sharded sequence dim — an inherently sequential op GSPMD can
+    only satisfy by gathering the whole routing tensor.  Folding the
+    sequence into ``moe_local_chunks`` independent routing groups (aligned
+    with the SP shards, capacity cap/N each) keeps every cumsum local.
+    Semantics match deployed EP systems, which enforce per-device capacity
+    anyway; balance *improves* slightly (finer-grained overflow drops)."""
+    b, s, d = x.shape
+    n = cfg.moe_local_chunks
+    import dataclasses as _dc
+    sub = _dc.replace(cfg, moe_local_chunks=0)
+    xr = x.reshape(b * n, s // n, d)
+    y, aux = moe_apply(p, sub, xr, sh)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply_sorted(p, cfg, x, sh=None):
+    """Sort-based dispatch (hillclimb optimization, EXPERIMENTS.md Sec. Perf).
+
+    The one-hot einsum dispatch costs O(S*E*C*D) flops and materializes
+    [B,S,E,C] tensors; sorting (token, choice) pairs by expert and
+    gather/scattering into [E, C, D] buffers costs O(S log S + E*C*D) —
+    for a 32k-token prefill that removes the dominant dispatch matmuls.
+    Capacity is global over the device batch (slightly *better* balance
+    than per-row capacity; equivalence at high capacity is tested)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    cap = max(1, -(-int(cfg.capacity_factor * t * k) // e))
+
+    xf = x.reshape(t, d)
+    logits = xf.astype(jnp.float32) @ p["router"]            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # [T, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    exp_flat = gate_idx.reshape(t * k)
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    gv_flat = gate_vals.reshape(t * k)
+    order = jnp.argsort(exp_flat, stable=True)
+    exp_s = exp_flat[order]
+    first = jnp.searchsorted(exp_s, exp_s, side="left")
+    rank = jnp.arange(t * k, dtype=first.dtype) - first      # pos within expert
+    keep = rank < cap
+    buf = jnp.where(keep, exp_s * cap + rank.astype(jnp.int32), e * cap)
+
+    xe = jnp.zeros((e * cap + 1, d), x.dtype).at[buf].set(xf[tok_flat[order]])
+    xe = xe[:e * cap].reshape(e, cap, d)
+    if sh is not None and sh.enabled:
+        espec = sh.maybe(sh.model, e, "moe experts") if cfg.moe_ep else None
+        xe = sh.constrain(xe, jax.sharding.PartitionSpec(espec, None, None))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["down"]).reshape(e * cap, d)
+
+    contrib = jnp.where(keep[:, None], ye[jnp.minimum(buf, e * cap - 1)], 0.0)
+    contrib = contrib * gv_flat[order][:, None]
+    y = jnp.zeros((t, d), jnp.float32).at[tok_flat[order]].add(
+        contrib.astype(jnp.float32))
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)
+    me = jnp.mean(onehot.sum(axis=1), axis=0)
+    pe = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(me * pe)
+    return y.reshape(b, s, d).astype(x.dtype), aux

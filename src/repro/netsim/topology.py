@@ -1,0 +1,77 @@
+"""Two-tier fat-tree topology: static port enumeration + routing constants.
+
+Queue (output-port) layout, indexed contiguously:
+
+  t0_up[r, k]   : rack r's uplink to spine k          ids [0, P*U)
+  t1_down[k, r] : spine k's downlink to rack r        ids [P*U, 2*P*U)
+  t0_down[node] : rack's downlink to a host NIC       ids [2*P*U, 2*P*U + N)
+
+Emitters (anything that can place one packet per tick onto a wire):
+  ids [0, NQ)            : the queues above
+  ids [NQ, NQ + N)       : host NICs (senders)
+
+Routing is purely functional: (emitter, dst_node, entropy) -> next queue id,
+with negative ids encoding delivery to node (-(node+1)).  ECMP uplink choice
+hashes the packet entropy with a per-rack salt, exactly like switch ECMP
+hashing a header field (paper Sec. 3.6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.netsim.units import FatTreeConfig
+
+KIND_T0_UP = 0
+KIND_T1_DOWN = 1
+KIND_T0_DOWN = 2
+KIND_SENDER = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    tree: FatTreeConfig
+    n_queues: int
+    n_emitters: int
+    # per-emitter static arrays (numpy; moved to device by the engine)
+    kind: np.ndarray        # [E] emitter kind
+    rack: np.ndarray        # [E] rack of the emitter (or spine for t1_down)
+    aux: np.ndarray         # [E] spine index (t0_up), rack (t1_down), node (t0_down/sender)
+
+    def t0_up(self, r: int, k: int) -> int:
+        return r * self.tree.uplinks + k
+
+    def t1_down(self, k: int, r: int) -> int:
+        return self.tree.racks * self.tree.uplinks + k * self.tree.racks + r
+
+    def t0_down(self, node: int) -> int:
+        return 2 * self.tree.racks * self.tree.uplinks + node
+
+    def sender(self, node: int) -> int:
+        return self.n_queues + node
+
+
+def build_topology(tree: FatTreeConfig) -> Topology:
+    P, U, M, N = tree.racks, tree.uplinks, tree.nodes_per_rack, tree.n_nodes
+    nq = 2 * P * U + N
+    ne = nq + N
+    kind = np.zeros(ne, np.int32)
+    rack = np.zeros(ne, np.int32)
+    aux = np.zeros(ne, np.int32)
+    for r in range(P):
+        for k in range(U):
+            q = r * U + k
+            kind[q], rack[q], aux[q] = KIND_T0_UP, r, k
+    for k in range(U):
+        for r in range(P):
+            q = P * U + k * P + r
+            kind[q], rack[q], aux[q] = KIND_T1_DOWN, r, k
+    for n in range(N):
+        q = 2 * P * U + n
+        kind[q], rack[q], aux[q] = KIND_T0_DOWN, n // M, n
+    for n in range(N):
+        e = nq + n
+        kind[e], rack[e], aux[e] = KIND_SENDER, n // M, n
+    return Topology(tree=tree, n_queues=nq, n_emitters=ne, kind=kind, rack=rack, aux=aux)

@@ -1,0 +1,132 @@
+"""Unit system for the slotted packet simulator.
+
+One **tick** = serialization time of one MTU at line rate.  All links share a
+single rate (as in the paper's setup), so every port forwards exactly one
+data packet per tick; control packets (ACKs / trimmed headers / credits) are
+~64 B and ride priority queues, i.e. effectively zero serialization time.
+
+Handy invariant: BDP measured in packets == base RTT measured in ticks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+HDR_BYTES = 64.0  # trimmed-header / ACK wire size (bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkConfig:
+    """Physical constants. Defaults follow the paper (Sec. 4): 4 KiB MTU,
+    600 ns links, 400 ns switch traversal.  100 Gb/s is the paper's reference
+    bandwidth for parameter tuning (Sec. 3.5); the headline simulations use
+    800 Gb/s, which simply rescales the tick."""
+
+    rate_gbps: float = 100.0
+    mtu_bytes: int = 4096
+    link_latency_ns: float = 600.0
+    switch_latency_ns: float = 400.0
+
+    @property
+    def tick_ns(self) -> float:
+        return self.mtu_bytes * 8.0 / self.rate_gbps  # ns per MTU
+
+    @property
+    def link_lat_ticks(self) -> int:
+        return max(1, round(self.link_latency_ns / self.tick_ns))
+
+    @property
+    def switch_lat_ticks(self) -> int:
+        return max(1, round(self.switch_latency_ns / self.tick_ns))
+
+    @property
+    def hop_ticks(self) -> int:
+        """Store-and-forward hop: 1 tick serialization + link + switch."""
+        return 1 + self.link_lat_ticks + self.switch_lat_ticks
+
+
+@dataclasses.dataclass(frozen=True)
+class FatTreeConfig:
+    """Two-tier fat tree: ``racks`` T0 switches x ``nodes_per_rack`` hosts,
+    each T0 wired with one uplink to each of ``uplinks`` spines (T1).
+    Oversubscription ratio = nodes_per_rack / uplinks."""
+
+    racks: int = 8
+    nodes_per_rack: int = 16
+    uplinks: int = 4  # == number of spines
+
+    @property
+    def n_nodes(self) -> int:
+        return self.racks * self.nodes_per_rack
+
+    @property
+    def n_spines(self) -> int:
+        return self.uplinks
+
+    @property
+    def oversubscription(self) -> float:
+        return self.nodes_per_rack / self.uplinks
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """Derived tick-domain latencies for the 2-tier tree."""
+
+    hop: int            # per store-and-forward hop (data path)
+    ret_inter: int      # priority-path return latency, cross-rack
+    ret_intra: int      # priority-path return latency, same rack
+    fwd_inter: int      # empty-network one-way data latency, cross-rack
+    fwd_intra: int
+    brtt_inter: int     # base RTT (ticks == BDP in packets)
+    brtt_intra: int
+    trim_delay: int     # trim event -> sender notification latency
+
+
+def derive_timing(link: LinkConfig) -> Timing:
+    l, s = link.link_lat_ticks, link.switch_lat_ticks
+    hop = link.hop_ticks
+    # data path inter-rack: sender -> t0_up q -> t1_down q -> t0_down q -> rx
+    #   emission(+1+l+s) then 2 switch hops (+1+l+s each) then final link(+1+l)
+    fwd_inter = (1 + l + s) * 3 + (1 + l)
+    fwd_intra = (1 + l + s) * 1 + (1 + l)
+    # control return path: priority queues, negligible serialization
+    ret_inter = (l + s) * 3 + l
+    ret_intra = (l + s) * 1 + l
+    brtt_inter = fwd_inter + ret_inter
+    brtt_intra = fwd_intra + ret_intra
+    # trimmed header: forwarded (priority) from mid-path to receiver, then
+    # NACK back -- approximately one priority-path RTT from the trim point.
+    trim_delay = ret_inter + (1 + l + s)
+    return Timing(
+        hop=hop,
+        ret_inter=ret_inter,
+        ret_intra=ret_intra,
+        fwd_inter=fwd_inter,
+        fwd_intra=fwd_intra,
+        brtt_inter=brtt_inter,
+        brtt_intra=brtt_intra,
+        trim_delay=trim_delay,
+    )
+
+
+def bdp_bytes(link: LinkConfig, timing: Timing) -> float:
+    return float(timing.brtt_inter * link.mtu_bytes)
+
+
+def reference_bdp_bytes() -> float:
+    """Paper Sec. 3.5: reference bdp = 100 Gb/s network with 12 us RTT."""
+    return 100e9 / 8.0 * 12e-6  # = 150_000 bytes
+
+
+def gamma(link: LinkConfig, timing: Timing) -> float:
+    """fi/mi bandwidth-latency scaling factor (paper Sec. 3.5)."""
+    return bdp_bytes(link, timing) / reference_bdp_bytes()
+
+
+def ns_to_ticks(ns: float, link: LinkConfig) -> int:
+    return int(math.ceil(ns / link.tick_ns))
+
+
+def ticks_to_us(ticks, link: LinkConfig) -> float:
+    return ticks * link.tick_ns * 1e-3

@@ -1,0 +1,115 @@
+"""Traffic patterns from the paper's evaluation (Sec. 4): incast,
+permutation (including multi-permutation and uneven-size variants), and
+windowed alltoall.
+
+A workload is a static flow table.  ``window`` implements the paper's
+windowed alltoall (Sec. 4.5): a sender's flow with per-sender order index j
+becomes eligible only while fewer than ``window`` of its predecessors are
+unfinished, keeping k flows active per node at all times.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.netsim.units import FatTreeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    src: np.ndarray          # [F] i32 sender node
+    dst: np.ndarray          # [F] i32 receiver node
+    size: np.ndarray         # [F] i32 bytes
+    t_start: np.ndarray      # [F] i32 tick
+    order: np.ndarray        # [F] i32 per-sender flow ordinal (alltoall windowing)
+    window: int = 1 << 30    # flows eligible per sender at once
+
+    @property
+    def n_flows(self) -> int:
+        return int(self.src.shape[0])
+
+
+def incast(tree: FatTreeConfig, degree: int, size_bytes: int, receiver: int = 0,
+           seed: int = 0, start: int = 0) -> Workload:
+    """`degree`:1 incast onto `receiver`, senders spread across racks."""
+    n = tree.n_nodes
+    if degree > n - 1:
+        raise ValueError("incast degree exceeds node count")
+    rng = np.random.default_rng(seed)
+    # spread senders round-robin over racks so the fan-in crosses the core
+    order = np.argsort((np.arange(n) % tree.nodes_per_rack) * tree.racks
+                       + np.arange(n) // tree.nodes_per_rack, kind="stable")
+    candidates = np.array([x for x in order if x != receiver], np.int32)
+    src = candidates[:degree]
+    rng.shuffle(src)
+    f = degree
+    return Workload(
+        name=f"incast_{degree}to1",
+        src=src.astype(np.int32),
+        dst=np.full(f, receiver, np.int32),
+        size=np.full(f, size_bytes, np.int32),
+        t_start=np.full(f, start, np.int32),
+        order=np.zeros(f, np.int32),
+    )
+
+
+def permutation(tree: FatTreeConfig, size_bytes: int, seed: int = 0,
+                cross_rack: bool = True, n_perms: int = 1,
+                big_flow: tuple[int, int] | None = None) -> Workload:
+    """Node-to-node permutation(s).  ``cross_rack`` forces every flow through
+    the core (paper: 'selected so that each packet crosses the core
+    switches').  ``n_perms`` > 1 runs several concurrent permutations
+    (Fig. 11c); ``big_flow=(idx, size)`` makes one flow bigger (Fig. 11d)."""
+    n = tree.n_nodes
+    rng = np.random.default_rng(seed)
+    srcs, dsts, orders = [], [], []
+    for pi in range(n_perms):
+        if cross_rack:
+            shift = tree.nodes_per_rack * (1 + rng.integers(0, tree.racks - 1))
+            dst = (np.arange(n) + shift) % n
+        else:
+            dst = rng.permutation(n)
+            while np.any(dst == np.arange(n)):
+                dst = rng.permutation(n)
+        srcs.append(np.arange(n))
+        dsts.append(dst)
+        orders.append(np.full(n, pi))
+    src = np.concatenate(srcs).astype(np.int32)
+    dst = np.concatenate(dsts).astype(np.int32)
+    size = np.full(src.shape[0], size_bytes, np.int32)
+    if big_flow is not None:
+        size[big_flow[0]] = big_flow[1]
+    return Workload(
+        name=f"permutation_x{n_perms}",
+        src=src,
+        dst=dst,
+        size=size,
+        t_start=np.zeros_like(src),
+        order=np.concatenate(orders).astype(np.int32),
+    )
+
+
+def alltoall(tree: FatTreeConfig, size_bytes: int, window: int = 4,
+             nodes: int | None = None, seed: int = 0) -> Workload:
+    """Windowed alltoall among the first ``nodes`` hosts (Sec. 4.5)."""
+    n = nodes or tree.n_nodes
+    srcs, dsts, orders = [], [], []
+    for s in range(n):
+        # classic shifted schedule: round j targets (s + j) mod n
+        for j in range(1, n):
+            srcs.append(s)
+            dsts.append((s + j) % n)
+            orders.append(j - 1)
+    f = len(srcs)
+    return Workload(
+        name=f"alltoall_{n}x{n}_w{window}",
+        src=np.array(srcs, np.int32),
+        dst=np.array(dsts, np.int32),
+        size=np.full(f, size_bytes, np.int32),
+        t_start=np.zeros(f, np.int32),
+        order=np.array(orders, np.int32),
+        window=window,
+    )

@@ -1,0 +1,164 @@
+"""AdamW with memory-tiering for 100B+ models on 16 GB/chip:
+
+* moment dtype is configurable (fp32 / bf16) — jamba-398b needs bf16
+  moments to fit (DESIGN.md Sec. 7);
+* optional fp32 master copy of bf16 params;
+* ZeRO-1: a helper that extends parameter PartitionSpecs with the ``data``
+  axis for optimizer state, so moments/master shard over data parallel
+  replicas (XLA then emits reduce-scatter + all-gather around the update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"       # "float32" | "bfloat16"
+    master_weights: bool = False        # fp32 master copy of bf16 params
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+    master: Optional[dict]
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    master = None
+    if cfg.master_weights:
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        master=master,
+    )
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(cfg: AdamWConfig, state: AdamWState, params, grads):
+    """Returns (new_params, new_state, stats)."""
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v, pm):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        base = (pm if pm is not None else p).astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * base)
+        return new, m32.astype(mdt), v32.astype(mdt)
+
+    masters = state.master if state.master is not None else \
+        jax.tree.map(lambda _: None, params)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    flat_pm = tdef.flatten_up_to(masters) if state.master is not None \
+        else [None] * len(flat_p)
+
+    new_p, new_m, new_v, new_master = [], [], [], []
+    for p, g, m, v, pm in zip(flat_p, flat_g, flat_m, flat_v, flat_pm):
+        np_, nm, nv = upd(p, g, m, v, pm)
+        new_master.append(np_ if state.master is not None else None)
+        new_p.append(np_.astype(p.dtype))
+        new_m.append(nm)
+        new_v.append(nv)
+
+    params2 = jax.tree.unflatten(tdef, new_p)
+    state2 = AdamWState(
+        step=step,
+        mu=jax.tree.unflatten(tdef, new_m),
+        nu=jax.tree.unflatten(tdef, new_v),
+        master=jax.tree.unflatten(tdef, new_master)
+        if state.master is not None else None,
+    )
+    return params2, state2, {"lr": lr, "grad_norm": gnorm}
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 sharding
+# --------------------------------------------------------------------------
+
+
+def zero1_spec(param_spec: P, shape, data_axes, axis_sizes) -> P:
+    """Extend a parameter spec with data-axis sharding on the first
+    divisible, currently-unsharded dim (optimizer-state sharding).
+    No-op when the data axes already appear (FSDP-sharded params)."""
+    spec = list(param_spec) if param_spec else []
+    spec += [None] * (len(shape) - len(spec))
+    axes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+    used = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            used.add(a)
+    if used & set(axes):
+        return P(*spec)     # already data-sharded (FSDP): ZeRO-1 is implied
+    n = 1
+    for a in axes:
+        n *= axis_sizes.get(a, 1)
+    for i, (dim, cur) in enumerate(zip(shape, spec)):
+        if cur is None and dim % n == 0 and dim >= n:
+            spec[i] = data_axes
+            return P(*spec)
+    return P(*spec)  # nothing divisible: stays replicated over data
+
+
+def zero1_state_specs(cfg: AdamWConfig, param_specs, param_shapes, sh):
+    """Build the AdamWState spec tree from parameter specs."""
+    def ext(ps, shp):
+        return zero1_spec(ps, shp.shape, sh.batch_axes or ("data",), sh.sizes)
+
+    mom = jax.tree.map(ext, param_specs, param_shapes)
+    return AdamWState(
+        step=P(),
+        mu=mom,
+        nu=jax.tree.map(lambda x: x, mom),
+        master=mom if cfg.master_weights else None,
+    )

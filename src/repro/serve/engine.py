@@ -1,0 +1,36 @@
+"""Batched serving: prefill + greedy decode loop over the model zoo's
+cache-carrying serve path."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_new", "max_len"))
+def generate(params, cfg, tokens, *, max_new: int, max_len: int):
+    """Greedy generation for token-frontend models.
+
+    tokens: i32[B, S_prompt].  Returns i32[B, max_new].
+    """
+    if cfg.frontend != "tokens":
+        raise ValueError("generate() requires a token frontend")
+    batch = {"tokens": tokens}
+    last_logits, caches, cache_len = lm.prefill(params, cfg, batch,
+                                                max_len=max_len)
+    first = jnp.argmax(last_logits[:, -1, :cfg.vocab], axis=-1).astype(jnp.int32)
+
+    def body(carry, _):
+        tok, caches, cl = carry
+        logits, caches = lm.decode_step(params, cfg, {"tokens": tok[:, None]},
+                                        caches, cl + 1)
+        nxt = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1).astype(jnp.int32)
+        return (nxt, caches, cl + 1), tok
+
+    (_, _, _), toks = jax.lax.scan(body, (first, caches, cache_len),
+                                   None, length=max_new)
+    return toks.T                                            # [B, max_new]

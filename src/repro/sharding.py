@@ -1,0 +1,148 @@
+"""Sharding rules for the production meshes.
+
+Axes: single-pod mesh is ``(data=16, model=16)``; multi-pod adds a leading
+``pod`` axis that *extends data parallelism hierarchically* (gradients
+all-reduce inside a pod over ICI, then across pods — XLA emits the
+hierarchical collective from the nested spec).
+
+Divisibility fallback: any tensor dim not divisible by its target axis size
+is replicated instead (e.g. qwen2's 14 attention heads on a 16-way model
+axis).  This keeps every (arch x mesh) combination lowerable; the roofline
+table then *shows* the cost of replication rather than hiding a crash.
+"""
+
+from __future__ import annotations
+
+import logging
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+log = logging.getLogger(__name__)
+
+
+class Shardings:
+    """Mesh-aware spec factory with divisibility fallback.
+
+    ``mesh=None`` disables all constraints (CPU smoke-test mode).
+    """
+
+    def __init__(self, mesh=None, *, seq_shard: bool = False,
+                 decode_replicate: bool = False):
+        self.mesh = mesh
+        self.enabled = mesh is not None
+        self.seq_shard = seq_shard
+        # decode optimization: replicate the (tiny) per-token activations
+        # over the data axes so matmuls contract against *locally sharded*
+        # 2D weights (partial-sum + small all-reduce) instead of
+        # all-gathering FSDP weight shards for a one-token batch
+        self.decode_replicate = decode_replicate
+        if self.enabled:
+            names = mesh.axis_names
+            sizes = dict(zip(names, mesh.devices.shape)) if hasattr(mesh, "devices") \
+                else dict(zip(names, mesh.axis_sizes))
+            self.batch_axes = tuple(a for a in ("pod", "data") if a in names)
+            self.model_axis = "model" if "model" in names else None
+            self.sizes = sizes
+        else:
+            self.batch_axes = ()
+            self.model_axis = None
+            self.sizes = {}
+
+    # ---------------- axis helpers ----------------
+
+    def axis_size(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            out = 1
+            for a in axis:
+                out *= self.sizes.get(a, 1)
+            return out
+        return self.sizes.get(axis, 1)
+
+    def maybe(self, axis, dim: int, what: str = ""):
+        """axis if dim divides evenly over it, else None (replicate)."""
+        if not self.enabled or axis is None:
+            return None
+        n = self.axis_size(axis)
+        if dim % n == 0:
+            return axis
+        log.info("sharding fallback: %s dim %d not divisible by %s=%d -> replicated",
+                 what, dim, axis, n)
+        return None
+
+    @property
+    def batch(self):
+        return self.batch_axes if self.batch_axes else None
+
+    @property
+    def model(self):
+        return self.model_axis
+
+    @property
+    def seq(self):
+        """Sequence-parallel axis for inter-block activations."""
+        return self.model_axis if (self.seq_shard and self.enabled) else None
+
+    # ---------------- constraints ----------------
+
+    def constrain(self, x, spec: P):
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def constrain_act(self, x):
+        """[B, S, D] residual-stream activations."""
+        if not self.enabled:
+            return x
+        s = self.seq if (self.seq and x.shape[1] % self.axis_size(self.seq) == 0) else None
+        return self.constrain(x, P(self.batch, s, None))
+
+    def constrain_dec(self, x):
+        """Decode-path activation entering a weight matmul."""
+        if not self.enabled:
+            return x
+        if self.decode_replicate:
+            return self.constrain(x, P(*([None] * x.ndim)))
+        return self.constrain(x, P(self.batch, *([None] * (x.ndim - 1))))
+
+    def constrain_heads(self, x):
+        """[B, S, H, Dh]."""
+        if not self.enabled:
+            return x
+        if self.decode_replicate:
+            # decode2d: forcing (batch, heads) sharding right after the
+            # projection makes GSPMD all-gather the weight over `data`
+            # (measured — EXPERIMENTS.md Sec. Perf); leave the tiny
+            # per-token tensor free and reshard at the cache instead.
+            return x
+        h = self.maybe(self.model, x.shape[2], "attn heads")
+        return self.constrain(x, P(self.batch, None, h, None))
+
+    def constrain_ffn(self, h):
+        """[B, S, F] (or [..., F]) ffn hidden."""
+        if not self.enabled:
+            return h
+        if self.decode_replicate:
+            # decode2d: hidden sharded over the *combined* axes, batch
+            # replicated (tiny per-token tensors, weights never move)
+            comb = tuple([*(self.batch_axes or ()), self.model])
+            f = self.maybe(comb, h.shape[-1], "ffn hidden (combined)")
+            return self.constrain(h, P(*([None] * (h.ndim - 1)), f))
+        f = self.maybe(self.model, h.shape[-1], "ffn hidden")
+        spec = [self.batch] + [None] * (h.ndim - 2) + [f]
+        return self.constrain(h, P(*spec))
+
+    def constrain_logits(self, x):
+        if not self.enabled:
+            return x
+        if self.decode_replicate:
+            comb = tuple([*(self.batch_axes or ()), self.model])
+            v = self.maybe(comb, x.shape[-1], "vocab (combined)")
+            return self.constrain(x, P(None, None, v))
+        v = self.maybe(self.model, x.shape[-1], "vocab")
+        return self.constrain(x, P(self.batch, None, v))
+
+
+NOSHARD = Shardings(None)

@@ -1,0 +1,74 @@
+"""Training loop with checkpoint/restart fault tolerance.
+
+Restart semantics: on start, the loop resumes from the newest complete
+checkpoint (params + optimizer + data-iterator state), so a preempted or
+crashed job continues exactly where it left off — combined with the atomic
+checkpointer this survives kill -9 at any point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.train.step import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep: int = 2
+    seed: int = 0
+
+
+def train(model_cfg, tcfg: TrainConfig, lcfg: LoopConfig, dcfg: DataConfig,
+          sh=None, log=print):
+    key = jax.random.key(lcfg.seed)
+    params = lm.init_params(model_cfg, key)
+    from repro.optim import adamw
+    opt = adamw.init(tcfg.adam, params)
+    data = SyntheticLM(dcfg)
+    start_step = 0
+
+    if lcfg.ckpt_dir:
+        step0, tree, extra = ckpt.restore_latest(lcfg.ckpt_dir, (params, opt))
+        if step0 is not None:
+            params, opt = tree
+            data.restore(extra["data"])
+            start_step = step0
+            log(f"[resume] restored step {step0}")
+
+    step_fn = jax.jit(make_train_step(model_cfg, tcfg, sh),
+                      donate_argnums=(0, 1))
+    losses = []
+    t0 = time.time()
+    tokens_per_step = dcfg.global_batch * dcfg.seq_len
+    for step in range(start_step, lcfg.steps):
+        batch = next(data)
+        batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        params, opt, stats = step_fn(params, opt, batch)
+        loss = float(stats["loss"])
+        losses.append(loss)
+        if (step + 1) % lcfg.log_every == 0:
+            dt = time.time() - t0
+            tps = tokens_per_step * lcfg.log_every / max(dt, 1e-9)
+            log(f"step {step+1:5d} loss {loss:.4f} "
+                f"gnorm {float(stats['grad_norm']):.3f} "
+                f"lr {float(stats['lr']):.2e} tok/s {tps:,.0f}")
+            t0 = time.time()
+        if lcfg.ckpt_dir and (step + 1) % lcfg.ckpt_every == 0:
+            ckpt.save(lcfg.ckpt_dir, step + 1, (params, opt),
+                      extra={"data": data.state()}, keep=lcfg.keep)
+    if lcfg.ckpt_dir:
+        ckpt.save(lcfg.ckpt_dir, lcfg.steps, (params, opt),
+                  extra={"data": data.state()}, keep=lcfg.keep)
+    return params, opt, losses

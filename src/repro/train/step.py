@@ -1,0 +1,76 @@
+"""Training step factory: loss -> grad (f32 accumulation, optional
+microbatch gradient accumulation) -> AdamW update.
+
+Gradient accumulation reshapes the global batch into ``microbatches``
+slices consumed by ``lax.scan`` — the standard fit-100B-on-16GB trick: the
+live activation set belongs to one microbatch while gradients accumulate
+in (ZeRO-sharded) f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adam: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatches: int = 1
+    remat: bool = True
+    aux_weight: float = 0.01
+
+
+def make_train_step(model_cfg, tcfg: TrainConfig, sh=None):
+    """Returns train_step(params, opt_state, batch) -> (params', opt', stats)."""
+
+    def loss_for(params, batch):
+        loss, metrics = lm.loss_fn(params, model_cfg, batch, sh,
+                                   remat=tcfg.remat,
+                                   aux_weight=tcfg.aux_weight)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        m = tcfg.microbatches
+        if m == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(m, b // m, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, met), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), met
+
+            (g_sum, l_sum), _ = jax.lax.scan(body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / m, g_sum)
+            loss = l_sum / m
+            metrics = {}
+
+        params2, opt2, stats = adamw.update(tcfg.adam, opt_state, params, grads)
+        stats = dict(stats, loss=loss, **{k: v for k, v in metrics.items()})
+        return params2, opt2, stats
+
+    return train_step
+
+
+def init_state(model_cfg, tcfg: TrainConfig, key):
+    params = lm.init_params(model_cfg, key)
+    opt = adamw.init(tcfg.adam, params)
+    return params, opt

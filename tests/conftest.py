@@ -1,0 +1,6 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device; only the dry-run subprocesses
+# set xla_force_host_platform_device_count (and they set it themselves).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

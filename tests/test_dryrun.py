@@ -1,0 +1,134 @@
+"""Dry-run machinery tests.
+
+The production-mesh compiles need 512 fake devices, which must be set
+before jax initializes — so the actual lower+compile runs in a subprocess
+(exactly how the real sweep is invoked).  Spec-rule unit tests run inline.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import specs as S
+from repro.models import lm
+from repro.sharding import Shardings
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+class FakeMesh:
+    axis_names = ("pod", "data", "model")
+    axis_sizes = (2, 16, 16)
+
+
+def _specs_for(arch, fsdp=False):
+    cfg = get_config(arch)
+    sh = Shardings(FakeMesh())
+    sds = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.key(0)))
+    return cfg, S.param_specs(cfg, sh, sds, fsdp=fsdp), sds
+
+
+def _leaf(tree, *path):
+    for p in path:
+        tree = tree[p]
+    return tree
+
+
+def test_param_specs_tp_rules():
+    cfg, specs, sds = _specs_for("qwen3-0.6b")
+    g0 = specs["groups"][0]
+    assert g0["mixer"]["wq"] == P(None, None, "model")
+    assert g0["mixer"]["wo"] == P(None, "model", None)
+    assert g0["ffn"]["down"] == P(None, "model", None)
+    assert specs["embed"] == P("model", None)
+
+
+def test_param_specs_divisibility_fallback():
+    """qwen2: the fused 14*64=896 projection dim shards (896 % 16 == 0),
+    but the 14-way *head* layout cannot — constrain_heads must fall back."""
+    cfg, specs, sds = _specs_for("qwen2-0.5b")
+    g0 = specs["groups"][0]
+    assert g0["mixer"]["wq"] == P(None, None, "model")    # fused dim divides
+    assert g0["ffn"]["gate"] == P(None, None, "model")    # 4864 divides
+    sh = Shardings(FakeMesh())
+    assert sh.maybe("model", cfg.n_heads, "heads") is None     # 14 -> replicate
+    assert sh.maybe("model", cfg.n_kv_heads, "kv") is None     # 2  -> replicate
+    # minicpm3: 40 heads also fall back; latent ranks shard
+    cfg2, specs2, _ = _specs_for("minicpm3-4b")
+    assert sh.maybe("model", cfg2.n_heads, "heads") is None
+    assert specs2["groups"][0]["mixer"]["wdkv"] == P(None, None, "model")
+
+
+def test_param_specs_moe_ep_vs_tp():
+    _, specs, _ = _specs_for("dbrx-132b", fsdp=True)      # 16 experts -> EP
+    g0 = specs["groups"][0]
+    assert g0["ffn"]["gate"][1] == "model"
+    _, specs, _ = _specs_for("mixtral-8x22b", fsdp=True)  # 8 experts -> TP
+    g0 = specs["groups"][0]
+    assert g0["ffn"]["gate"][1] != "model"
+    assert g0["ffn"]["gate"][3] == "model"
+
+
+def test_param_specs_fsdp_adds_data_axes():
+    _, specs, _ = _specs_for("llama-3.2-vision-90b", fsdp=True)
+    g0 = specs["groups"][0]
+    assert g0["mixer"]["wq"] == P(None, ("pod", "data"), "model")
+
+
+def test_jamba_hybrid_specs_cover_all_kinds():
+    cfg, specs, sds = _specs_for("jamba-1.5-large-398b", fsdp=True)
+    kinds = set()
+    for pos, spec in enumerate(specs["groups"]):
+        kinds.update(spec["mixer"].keys())
+    assert "wz" in kinds and ("wq" in kinds)              # mamba + attn mix
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_reduced_cells():
+    """End-to-end: lower+compile two reduced cells on the 512-device mesh
+    in a fresh interpreter (XLA_FLAGS isolation)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    for arch, shape, extra in (
+            ("qwen3-0.6b", "train_4k", ["--multi-pod"]),
+            ("mamba2-780m", "decode_32k", []),
+    ):
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--reduced", *extra],
+            env=env, cwd=ROOT, capture_output=True, text=True, timeout=500)
+        assert out.returncode == 0, out.stdout + out.stderr
+
+
+@pytest.mark.slow
+def test_compressed_allreduce_subprocess():
+    """int8 error-feedback all-reduce on a fake 8-device mesh."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.train.compression import make_compressed_allreduce, BLOCK
+mesh = jax.make_mesh((8,), ("data",))
+fn, world = make_compressed_allreduce(mesh, "data")
+rng = np.random.default_rng(0)
+N = 8 * BLOCK * 4
+g = jnp.asarray(rng.standard_normal((8, N)), jnp.float32)
+err = jnp.zeros((8, N), jnp.float32)
+out, err2 = fn(g, err)
+want = np.asarray(g).mean(0)
+got = np.asarray(out)[0]
+rel = np.abs(got - want).max() / np.abs(want).max()
+assert rel < 0.02, rel
+# error feedback: residual is bounded by the quantization step
+assert np.abs(np.asarray(err2)).max() < np.abs(np.asarray(g)).max() / 64
+print("compressed allreduce OK", rel)
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=ROOT,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr

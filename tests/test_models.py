@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward + one
+train step, asserting output shapes and the absence of NaNs — plus
+family-level consistency checks (decode vs forward, unroll vs scan)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import lm
+from repro.optim import adamw
+from repro.train.step import TrainConfig, make_train_step
+
+KEY = jax.random.key(0)
+
+
+def make_batch(cfg, b=2, s=32, seed=3):
+    k = jax.random.fold_in(KEY, seed)
+    out = {}
+    if cfg.frontend == "tokens":
+        toks = jax.random.randint(k, (b, s), 0, cfg.vocab, jnp.int32)
+        out["tokens"] = toks
+    else:
+        out["embeds"] = (jax.random.normal(k, (b, s, cfg.d_model), jnp.float32)
+                         * 0.1).astype(jnp.bfloat16)
+        toks = jax.random.randint(k, (b, s), 0, cfg.vocab, jnp.int32)
+    out["labels"] = toks
+    if cfg.cross_kv_len:
+        out["cross"] = (jax.random.normal(
+            k, (b, cfg.cross_kv_len, cfg.d_model), jnp.float32) * 0.1
+        ).astype(jnp.bfloat16)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    params = lm.init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    logits, aux = lm.forward(params, cfg, batch)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    tcfg = TrainConfig(adam=adamw.AdamWConfig(lr=1e-3, warmup_steps=1))
+    step = make_train_step(cfg, tcfg)
+    opt = adamw.init(tcfg.adam, params)
+    p2, o2, stats = step(params, opt, batch)
+    assert np.isfinite(float(stats["loss"]))
+    assert np.isfinite(float(stats["grad_norm"]))
+    # parameters actually moved
+    delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "minicpm3-4b", "mamba2-780m",
+                                  "jamba-1.5-large-398b", "mixtral-8x22b",
+                                  "llama-3.2-vision-90b"])
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch, reduced=True)
+    if cfg.n_experts:   # avoid capacity-drop noise in the equivalence check
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = lm.init_params(cfg, KEY)
+    B, S, MAX = 2, 16, 24
+    kt = jax.random.fold_in(KEY, 7)
+    if cfg.frontend == "tokens":
+        toks = jax.random.randint(kt, (B, MAX), 0, cfg.vocab, jnp.int32)
+        full = {"tokens": toks[:, :S + 1]}
+        pre = {"tokens": toks[:, :S]}
+        dec = {"tokens": toks[:, S:S + 1]}
+    else:
+        emb = (jax.random.normal(kt, (B, MAX, cfg.d_model), jnp.float32)
+               * 0.1).astype(jnp.bfloat16)
+        full = {"embeds": emb[:, :S + 1]}
+        pre = {"embeds": emb[:, :S]}
+        dec = {"embeds": emb[:, S:S + 1]}
+    if cfg.cross_kv_len:
+        cross = (jax.random.normal(kt, (B, cfg.cross_kv_len, cfg.d_model),
+                                   jnp.float32) * 0.1).astype(jnp.bfloat16)
+        full["cross"] = cross
+        pre["cross"] = cross
+    want, _ = lm.forward(params, cfg, full, remat=False)
+    want = np.asarray(want[:, -1], np.float32)
+    _, caches, cache_len = lm.prefill(params, cfg, pre, max_len=MAX,
+                                      remat=False)
+    got, _ = lm.decode_step(params, cfg, dec, caches, cache_len + 1)
+    got = np.asarray(got[:, 0], np.float32)
+    err = np.max(np.abs(want - got)) / (np.max(np.abs(want)) + 1e-9)
+    assert err < 0.05, err
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "jamba-1.5-large-398b"])
+def test_unroll_matches_scan(arch):
+    """The roofline extractor's unrolled lowering is numerically identical
+    to the scan-based production path (checked in f32 — bf16 merely
+    amplifies reduction-order rounding through deep recurrent stacks)."""
+    cfg = get_config(arch, reduced=True)
+    params = lm.init_params(cfg, KEY)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        params)
+    batch = make_batch(cfg)
+    a, _ = lm.forward(params, cfg, batch, remat=False)
+    cfg_u = dataclasses.replace(cfg, unroll=True)
+    b, _ = lm.forward(params, cfg_u, batch, remat=False)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_param_counts_match_public_sizes():
+    """Full configs land near their nameplate parameter counts."""
+    expect = {
+        "qwen2-0.5b": (0.35e9, 0.75e9),
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "minicpm3-4b": (3e9, 5e9),
+        "phi3-mini-3.8b": (3.3e9, 4.5e9),
+        "mamba2-780m": (0.6e9, 1.0e9),
+        "mixtral-8x22b": (120e9, 160e9),
+        "dbrx-132b": (110e9, 150e9),
+        "jamba-1.5-large-398b": (330e9, 450e9),
+        "llama-3.2-vision-90b": (80e9, 110e9),
+        "musicgen-large": (2.5e9, 4.5e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

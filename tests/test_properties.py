@@ -1,0 +1,149 @@
+"""Property-based tests (hypothesis) for CC invariants and end-to-end
+netsim conservation laws."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import registry
+from repro.core.smartt import smartt_update
+from repro.core.types import CCEvent, init_cc_state, make_cc_params
+from repro.core import reps
+from repro.netsim.engine import SimConfig, build, summarize
+from repro.netsim.units import FatTreeConfig, LinkConfig
+from repro.netsim import workloads
+
+MTU = 4096.0
+BDP = 26 * MTU
+
+
+def _params():
+    return make_cc_params(mtu=MTU, bdp=BDP, brtt=26.0)
+
+
+def _event(F, rng):
+    return CCEvent(
+        has_ack=jnp.asarray(rng.random(F) < 0.7),
+        ack_bytes=jnp.full((F,), MTU, jnp.float32),
+        ecn=jnp.asarray(rng.random(F) < 0.5),
+        rtt=jnp.asarray(rng.uniform(15, 120, F), jnp.float32),
+        ack_entropy=jnp.asarray(rng.integers(0, 256, F), jnp.int32),
+        n_trims=jnp.asarray(rng.integers(0, 2, F), jnp.int32),
+        trim_bytes=jnp.asarray(rng.integers(0, 2, F) * MTU, jnp.float32),
+        n_timeouts=jnp.asarray(rng.integers(0, 2, F), jnp.int32),
+        to_bytes=jnp.asarray(rng.integers(0, 2, F) * MTU, jnp.float32),
+        unacked=jnp.asarray(rng.uniform(0, BDP, F), jnp.float32),
+        credit_grant=jnp.zeros((F,), jnp.float32),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 30))
+def test_cwnd_always_within_bounds(seed, steps):
+    """Alg. 1 l. 36: cwnd in [mtu, 1.25*bdp] after every update, for any
+    event sequence."""
+    rng = np.random.default_rng(seed)
+    p = _params()
+    s = init_cc_state(8, p)
+    for t in range(steps):
+        s = smartt_update(p, s, _event(8, rng), now=float(t * 3))
+        c = np.asarray(s.cwnd)
+        assert np.all(c >= MTU - 1e-3) and np.all(c <= 1.25 * BDP + 1e-3)
+        assert np.all(np.isfinite(np.asarray(s.avg_wtd)))
+        assert np.all((np.asarray(s.avg_wtd) >= 0)
+                      & (np.asarray(s.avg_wtd) <= 1 + 1e-6))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_marked_ack_never_increases_window(seed):
+    """With QuickAdapt/FastIncrease structurally disabled, an ECN-marked
+    ACK can only shrink (or hold) the window."""
+    rng = np.random.default_rng(seed)
+    p = _params()
+    s = init_cc_state(4, p)
+    s = s._replace(
+        cwnd=jnp.asarray(rng.uniform(2 * MTU, BDP, 4), jnp.float32),
+        avg_wtd=jnp.ones((4,), jnp.float32),      # WTD open
+        qa_end=jnp.full((4,), 1e9, jnp.float32),  # no QA boundary
+        fi_count=jnp.zeros((4,), jnp.float32))
+    ev = _event(4, rng)._replace(
+        has_ack=jnp.ones((4,), bool), ecn=jnp.ones((4,), bool),
+        rtt=jnp.asarray(rng.uniform(30, 120, 4), jnp.float32),  # > brtt band
+        n_trims=jnp.zeros((4,), jnp.int32),
+        trim_bytes=jnp.zeros((4,), jnp.float32),
+        n_timeouts=jnp.zeros((4,), jnp.int32),
+        to_bytes=jnp.zeros((4,), jnp.float32))
+    s2 = smartt_update(p, s, ev, now=5.0)
+    assert np.all(np.asarray(s2.cwnd) <= np.asarray(s.cwnd) + 1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_clean_fast_ack_never_decreases_window(seed):
+    rng = np.random.default_rng(seed)
+    p = _params()
+    s = init_cc_state(4, p)
+    s = s._replace(cwnd=jnp.asarray(rng.uniform(2 * MTU, BDP, 4), jnp.float32),
+                   qa_end=jnp.full((4,), 1e9, jnp.float32))
+    ev = _event(4, rng)._replace(
+        has_ack=jnp.ones((4,), bool), ecn=jnp.zeros((4,), bool),
+        rtt=jnp.full((4,), 26.0, jnp.float32),
+        n_trims=jnp.zeros((4,), jnp.int32),
+        trim_bytes=jnp.zeros((4,), jnp.float32),
+        n_timeouts=jnp.zeros((4,), jnp.int32),
+        to_bytes=jnp.zeros((4,), jnp.float32))
+    s2 = smartt_update(p, s, ev, now=5.0)
+    assert np.all(np.asarray(s2.cwnd) >= np.asarray(s.cwnd) - 1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 50))
+def test_reps_entropy_range(seed, steps):
+    """REPS never emits an entropy outside [0, num_entropies)."""
+    rng = np.random.default_rng(seed)
+    p = reps.make_lb_params(num_entropies=256, bdp_pkts=26)
+    s = reps.init_lb_state(8, p, seed=seed)
+    flow_ids = jnp.arange(8, dtype=jnp.int32)
+    for t in range(steps):
+        mask = jnp.asarray(rng.random(8) < 0.8)
+        seqs = jnp.asarray(rng.integers(0, 100, 8), jnp.int32)
+        s, ent = reps.on_send(reps.LB_REPS, p, s, mask, seqs, flow_ids, t)
+        e = np.asarray(ent)
+        assert np.all((e >= 0) & (e < 256))
+        s = reps.on_ack(reps.LB_REPS, p, s,
+                        jnp.asarray(rng.random(8) < 0.5),
+                        jnp.asarray(rng.random(8) < 0.3),
+                        jnp.asarray(rng.integers(0, 256, 8), jnp.int32),
+                        flow_ids, t)
+        assert np.all(np.asarray(s.cached_entropy) % 256 >= 0)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    algo=st.sampled_from(["smartt", "swift", "mprdma", "eqds"]),
+    seed=st.integers(0, 1000),
+    trimming=st.booleans(),
+)
+def test_netsim_conserves_and_completes(algo, seed, trimming):
+    """Any small random workload: every flow finishes, receiver goodput
+    equals flow size exactly (no lost/duplicated bytes), metrics finite."""
+    tree = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=2)
+    rng = np.random.default_rng(seed)
+    n = tree.n_nodes
+    f = int(rng.integers(2, 6))
+    src = rng.choice(n, size=f, replace=False).astype(np.int32)
+    dst = np.array([(s + rng.integers(1, n)) % n for s in src], np.int32)
+    dst = np.where(dst == src, (dst + 1) % n, dst).astype(np.int32)
+    size = (rng.integers(1, 40, f) * 4096).astype(np.int32)
+    wl = workloads.Workload(
+        name="rand", src=src, dst=dst, size=size,
+        t_start=rng.integers(0, 50, f).astype(np.int32),
+        order=np.zeros(f, np.int32))
+    cfg = SimConfig(link=LinkConfig(), tree=tree, algo=algo, lb="reps",
+                    trimming=trimming)
+    sim = build(cfg, wl)
+    st_ = sim.run(max_ticks=30000)
+    s = summarize(sim, st_)
+    assert s["all_done"], (algo, seed, s["n_done"], f)
+    np.testing.assert_array_equal(s["goodput_bytes"], size)
