@@ -1,0 +1,78 @@
+"""Batched parameter-sweep benchmark: paper-style tuning grids for one
+compile per (workload, algorithm).
+
+Reproduces the Fig. 4-7-shaped studies as a grid sweep: an incast and a
+core-crossing permutation, each evaluated across {smartt, swift, mprdma,
+eqds} over an 8-point grid of (start_cwnd_mult x react_every) plus RED
+threshold variants — the kind of many-config evaluation loop that UEC-style
+tuning studies and spraying/congested-path analyses need.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per grid point, plus a
+per-grid compile/wall summary).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.sweep [incast perm ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.netsim import engine, workloads
+from repro.netsim.metrics import jain_fairness
+from repro.netsim.state import SimConfig
+from repro.netsim.sweep import build_sweep
+from repro.netsim.units import FatTreeConfig, LinkConfig
+
+TREE = FatTreeConfig(racks=2, nodes_per_rack=8, uplinks=2)   # 16 nodes, 4:1
+ALGOS = ("smartt", "swift", "mprdma", "eqds")
+MAX_TICKS = 60000
+
+# 8-point grid: initial window x reaction granularity, plus RED variants
+GRID = (
+    [{"start_cwnd_mult": a, "react_every": r}
+     for a in (0.5, 1.0, 1.25) for r in (1, 4)]
+    + [{"kmin_frac": 0.1, "kmax_frac": 0.4},
+       {"kmin_frac": 0.3, "kmax_frac": 0.9}]
+)
+
+
+def _workloads():
+    return (
+        ("incast", workloads.incast(TREE, degree=8, size_bytes=64 * 4096,
+                                    seed=3)),
+        ("perm", workloads.permutation(TREE, size_bytes=64 * 4096, seed=3)),
+    )
+
+
+def main() -> None:
+    wanted = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    for wl_name, wl in _workloads():
+        if wanted and not any(w in wl_name for w in wanted):
+            continue
+        for algo in ALGOS:
+            cfg = SimConfig(link=LinkConfig(), tree=TREE, algo=algo, lb="reps")
+            t0 = time.time()
+            sw = build_sweep(cfg, wl, GRID)
+            c0 = engine.STEP_TRACE_COUNT[0]
+            states = sw.run(max_ticks=MAX_TICKS)
+            states.now.block_until_ready()
+            wall = time.time() - t0
+            compiles = engine.STEP_TRACE_COUNT[0] - c0
+            rows = sw.summaries(states)
+            for pt, r in zip(GRID, rows):
+                tag = "+".join(f"{k}={v:g}" for k, v in pt.items())
+                done = r["fct_ticks"] > 0
+                jain = jain_fairness(r["fct_ticks"][done]) if done.any() else 0.0
+                print(f"sweep_{wl_name}_{algo}[{tag}],"
+                      f"{wall / len(GRID) * 1e6:.0f},"
+                      f"fct_max={r['fct_max']};jain={jain:.3f};"
+                      f"trims={r['trims']};done={r['n_done']}")
+            print(f"sweep_{wl_name}_{algo}_total,{wall*1e6:.0f},"
+                  f"points={len(GRID)};step_compiles={compiles}")
+
+
+if __name__ == "__main__":
+    main()

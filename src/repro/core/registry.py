@@ -1,8 +1,15 @@
-"""Dispatch table: algorithm name -> per-tick CC update function.
+"""Dispatch table: (algorithm name, backend) -> per-tick CC update function.
 
-The algorithm choice is static at trace time (each algorithm owns its jit
-specialization); all numeric parameters stay traced so tuning never
+The algorithm *and backend* choice is static at trace time (each owns its
+jit specialization); all numeric parameters stay traced so tuning never
 recompiles.
+
+Backends:
+  ``jnp``    — the pure-jnp reference update (every algorithm).
+  ``pallas`` — the blocked ``kernels/cc_update`` Pallas kernel streaming
+               the flow table through VMEM tiles (SMaRTT only; interpret
+               mode off-TPU, so it runs — and bit-matches the jnp backend —
+               everywhere).
 """
 
 from __future__ import annotations
@@ -26,8 +33,33 @@ CREDIT_BASED = {"eqds", "eqds_smartt"}
 # algorithms that pace by rate rather than window alone
 PACED = {"bbr"}
 
+BACKENDS = ("jnp", "pallas")
 
-def get(name: str):
+
+def _smartt_pallas_update(p, s, ev, now):
+    # deferred import: keeps core importable without the kernels package
+    import jax
+
+    from repro.kernels.cc_update.ops import smartt_update_pallas
+
+    return smartt_update_pallas(
+        p, s, ev, now, interpret=jax.default_backend() != "tpu")
+
+
+PALLAS_ALGORITHMS = {
+    "smartt": _smartt_pallas_update,
+}
+
+
+def get(name: str, cc_backend: str = "jnp"):
     if name not in ALGORITHMS:
         raise KeyError(f"unknown CC algorithm {name!r}; have {sorted(ALGORITHMS)}")
-    return ALGORITHMS[name]
+    if cc_backend == "jnp":
+        return ALGORITHMS[name]
+    if cc_backend == "pallas":
+        if name not in PALLAS_ALGORITHMS:
+            raise KeyError(
+                f"CC algorithm {name!r} has no 'pallas' backend; "
+                f"have {sorted(PALLAS_ALGORITHMS)}")
+        return PALLAS_ALGORITHMS[name]
+    raise KeyError(f"unknown cc backend {cc_backend!r}; have {BACKENDS}")

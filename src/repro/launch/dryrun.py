@@ -105,6 +105,14 @@ def per_device_bytes(tree_sds, spec_tree, mesh) -> int:
     return sum(jax.tree.leaves(jax.tree.map(one, tree_sds, spec_tree)))
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize Compiled.cost_analysis() across jax versions: older
+    releases return ``[dict]`` (one per computation), newer a bare dict."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost or {}
+
+
 def build_cell(arch: str, shape_name: str, mesh, *, reduced: bool = False,
                run_overrides: dict | None = None):
     """Returns (fn, example_args_with_shardings, meta)."""
@@ -128,7 +136,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     res = dict(
@@ -200,7 +208,7 @@ def roofline_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         fn, args, _ = _build_with_cfg(cfg, arch, shape_name, mesh, run)
         with mesh:
             compiled = jax.jit(fn).lower(*args).compile()
-            cost = compiled.cost_analysis()
+            cost = _cost_dict(compiled.cost_analysis())
         coll = collective_bytes(compiled.as_text())
         costs.append(dict(
             flops=float(cost.get("flops", 0.0)),

@@ -1,4 +1,4 @@
-"""Vectorized, time-stepped packet-level simulator.
+"""Vectorized, time-stepped packet-level simulator — composition layer.
 
 Execution model (DESIGN.md Sec. 6): one tick = one MTU serialization time;
 every output port forwards at most one data packet per tick.  All state is
@@ -6,117 +6,47 @@ struct-of-arrays with static shapes; one tick is a pure function
 ``step: SimState -> SimState`` executed under ``lax.while_loop`` (aggregate
 runs, early exit) or ``lax.scan`` (trace runs, per-tick outputs).
 
-Sub-step order within a tick:
-  1. departures : dequeue head per port, RED dequeue-marking, route,
-                  blackhole on failed links, place on the wire
-  2. arrivals   : packets landing now -> enqueue (trim/drop on overflow) or
-                  deliver (receiver dedupe, ACK generation)
-  3. control    : ACK / trim / timeout / credit events -> transport
-                  bookkeeping, CC update (SMaRTT or baseline), LB update
-  4. grants     : EQDS receiver-side pull-credit generation
-  5. sends      : per-sender round-robin flow arbitration, window/credit/
-                  pacing admission, REPS entropy assignment, emission
-  6. metrics    : occupancy/rate accounting
+The six sub-steps of a tick live in dedicated phase modules, each a pure
+function ``(Dims, Consts, SimState) -> SimState``:
+
+  1. departures : ``fabric.departures``  (dequeue, RED mark, route, wire)
+  2. arrivals   : ``fabric.arrivals``    (enqueue/trim/drop or deliver/ACK)
+  3. control    : ``transport.control``  (ACK/trim/timeout -> CC + LB)
+  4. grants     : ``sender.grants``      (EQDS pull credits)
+  5. sends      : ``sender.sends``       (arbitration, admission, emission)
+  6. metrics    : ``metrics.account``    (occupancy/rate accounting)
+
+``build`` resolves the CC algorithm to a backend-qualified update function
+(``cc_backend="jnp"`` pure jnp, or ``"pallas"`` for the ``kernels/
+cc_update`` kernel) and composes the phases over a ``Consts`` bundle of
+traced numerics — so retuning any parameter, or sweeping a whole grid of
+them (``netsim/sweep.py``), reuses one compiled step.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import registry, reps
-from repro.core.types import CCEvent, CCParams, CCState, init_cc_state, make_cc_params
-from repro.netsim import hashing
-from repro.netsim.topology import (KIND_SENDER, KIND_T0_DOWN, KIND_T0_UP,
-                                   KIND_T1_DOWN, Topology, build_topology)
-from repro.netsim.units import (FatTreeConfig, LinkConfig, Timing,
-                                derive_timing, gamma)
+from repro.core.types import CCParams
+from repro.netsim import fabric, metrics, sender, transport
+from repro.netsim.metrics import HIST_BINS, jain_fairness, summarize  # noqa: F401 (re-export)
+from repro.netsim.state import (Consts, Dims, SimConfig, SimState,  # noqa: F401
+                                derive, init_state)
+from repro.netsim.topology import Topology
+from repro.netsim.units import Timing
 from repro.netsim.workloads import Workload
 
 I32 = jnp.int32
 F32 = jnp.float32
 
-HIST_BINS = 64  # RTT histogram bins, width = brtt/8
-
-
-# --------------------------------------------------------------------------
-# configuration
-# --------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class SimConfig:
-    link: LinkConfig = LinkConfig()
-    tree: FatTreeConfig = FatTreeConfig()
-    algo: str = "smartt"
-    lb: str = "reps"
-    trimming: bool = True
-    rto_mult: float = 0.0            # RTO = rto_mult * trtt; 0 = auto
-                                     # (3.0 with trimming, 2.0 aggressive without)
-    num_entropies: int = 256
-    react_every: int = 1             # CC reaction granularity (Fig. 3b)
-    credit_window_mult: float = 1.0  # EQDS outstanding-credit window (BDPs)
-    start_cwnd_mult: float = 1.25    # initial window as fraction of BDP
-    # fault injection (Fig. 7): ((rack, uplink, period), ...) — period 2 =
-    # half-rate link, period 0 = dead link (blackholes traffic)
-    faults: tuple = ()
-    fault_start: int = 0
-    cc_overrides: tuple = ()         # (("fd", 0.5), ...) applied to CCParams
-
-
-# --------------------------------------------------------------------------
-# state
-# --------------------------------------------------------------------------
-
-
-class Metrics(NamedTuple):
-    n_trim: jnp.ndarray
-    n_drop: jnp.ndarray
-    n_black: jnp.ndarray
-    n_to: jnp.ndarray
-    n_retx: jnp.ndarray
-    n_ack: jnp.ndarray
-    delivered_pkts: jnp.ndarray
-    delivered_bytes: jnp.ndarray
-    rtt_hist: jnp.ndarray        # [HIST_BINS]
-    q_sum: jnp.ndarray           # sum over (ticks, ports) of occupancy
-    q_max: jnp.ndarray
-    spurious_retx: jnp.ndarray   # retransmitted packets that had been delivered
-
-
-class SimState(NamedTuple):
-    now: jnp.ndarray                 # i32 scalar
-    salt: jnp.ndarray                # i32 scalar — per-run hash decorrelation
-    q_fields: jnp.ndarray            # i32 [NQ+1, CAP, 5] flow/seq/ent/ecn/ts
-    q_head: jnp.ndarray              # i32 [NQ+1]
-    q_size: jnp.ndarray              # i32 [NQ+1]
-    infl: jnp.ndarray                # i32 [L+1, NE, 7] valid/dstq/flow/seq/ent/ecn/ts
-    ack_ring: jnp.ndarray            # i32 [R, N, 6] valid/flow/seq/ecn/ent/ts
-    trim_cnt: jnp.ndarray            # i32 [R, NF+1]
-    trim_bytes: jnp.ndarray          # f32 [R, NF+1]
-    lost_bits: jnp.ndarray           # i32 [R, NF+1, WW]
-    credit_ring: jnp.ndarray         # f32 [R, NF+1]
-    st_state: jnp.ndarray            # i32 [NF+1, W] 0=free 1=outstanding 3=lost
-    st_seq: jnp.ndarray              # i32 [NF+1, W]
-    st_ts: jnp.ndarray               # i32 [NF+1, W]
-    next_seq: jnp.ndarray            # i32 [NF]
-    done: jnp.ndarray                # bool [NF]
-    fct: jnp.ndarray                 # i32 [NF] (-1 = unfinished)
-    goodput: jnp.ndarray             # i32 [NF] unique bytes delivered
-    bitmap: jnp.ndarray              # i32 [NF+1, MAXW] receiver dedupe
-    granted: jnp.ndarray             # f32 [NF] EQDS credit issued
-    trim_seen: jnp.ndarray           # f32 [NF] trimmed bytes observed by receiver
-    rr_recv: jnp.ndarray             # i32 [N]
-    rr_send: jnp.ndarray             # i32 [N]
-    pace_accum: jnp.ndarray          # f32 [NF]
-    cc: CCState
-    lb: reps.LBState
-    m: Metrics
+# Incremented each time a composed step function is *traced* (not executed).
+# ``tests/test_sweep.py`` asserts a whole parameter grid costs exactly one.
+STEP_TRACE_COUNT = [0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,8 +59,10 @@ class Sim:
     wl: Workload
     cc_params: CCParams
     lb_params: reps.LBParams
-    dims: dict
-    step: callable          # jitted SimState -> SimState
+    dims: Dims
+    consts: Consts
+    step_fn: callable       # (Consts, SimState) -> SimState — sweepable form
+    step: callable          # SimState -> SimState (consts bound)
     init: callable          # () -> SimState
 
     def run(self, max_ticks: int) -> SimState:
@@ -155,469 +87,28 @@ class Sim:
 
 
 def build(cfg: SimConfig, wl: Workload) -> Sim:
-    link, tree = cfg.link, cfg.tree
-    topo = build_topology(tree)
-    tm = derive_timing(link)
+    topo, tm, dims, consts = derive(cfg, wl)
+    cc_update = registry.get(cfg.algo, cfg.cc_backend)
 
-    N, NQ, NE = tree.n_nodes, topo.n_queues, topo.n_emitters
-    NF = wl.n_flows
-    MTU = float(link.mtu_bytes)
-    CAP = int(tm.brtt_inter)                      # 1 BDP per port queue
-    # sent-ring slots: 1.5x the max window in packets (seq-range headroom;
-    # new sends block on occupied slots, modeling a bounded retx buffer)
-    W = int(2 ** np.ceil(np.log2(max(1.5 * 1.25 * tm.brtt_inter, 32))))
-    WW = W // 32
-    L = tm.hop + 2
-    R = int(max(tm.ret_inter, tm.trim_delay) + tm.hop + 4)
-    max_pkts = int(np.ceil(wl.size.max() / MTU))
-    MAXW = (max_pkts + 31) // 32
-    P, U, M = tree.racks, tree.uplinks, tree.nodes_per_rack
-    PU = P * U
+    def step_fn(consts: Consts, st: SimState) -> SimState:
+        STEP_TRACE_COUNT[0] += 1
+        st = fabric.departures(dims, consts, st)
+        st = fabric.arrivals(dims, consts, st)
+        st = transport.control(dims, consts, cc_update, st)
+        st = sender.grants(dims, consts, st)
+        st = sender.sends(dims, consts, st)
+        st = metrics.account(dims, consts, st)
+        return st._replace(now=st.now + 1)
 
-    if np.any(wl.src == wl.dst):
-        raise ValueError("flow with src == dst")
-
-    # ---- per-flow constants ----
-    src = jnp.asarray(wl.src, I32)
-    dst = jnp.asarray(wl.dst, I32)
-    size_f = jnp.asarray(wl.size, I32)
-    t_start = jnp.asarray(wl.t_start, I32)
-    inter = (wl.src // M) != (wl.dst // M)
-    # ACK return delay is constant per receiver: the ack ring is indexed
-    # (arrival_tick + ret, receiver) and a receiver delivers one packet per
-    # tick, so a *constant* return delay guarantees collision-free slots.
-    brtt_f = np.where(inter, tm.brtt_inter,
-                      tm.fwd_intra + tm.ret_inter).astype(np.float32)
-    ret_f = jnp.full(NF, tm.ret_inter, I32)
-    flow_ids = jnp.arange(NF, dtype=I32)
-
-    bdp = float(tm.brtt_inter * MTU)
-    cc_kwargs = dict(cfg.cc_overrides)
-    cc_params = make_cc_params(
-        mtu=MTU, bdp=bdp, brtt=brtt_f,
-        react_every=cfg.react_every,
-        gamma=gamma(link, tm),
-        use_trimming=cfg.trimming,
-        **cc_kwargs,
-    )
-    lb_params = reps.make_lb_params(
-        num_entropies=cfg.num_entropies,
-        bdp_pkts=int(tm.brtt_inter),
-    )
-    lb_mode = reps.LB_NAMES[cfg.lb]
-    cc_update = registry.get(cfg.algo)
-    credit_based = cfg.algo in registry.CREDIT_BASED
-    paced = cfg.algo in registry.PACED
-    rto_mult = cfg.rto_mult or (3.0 if cfg.trimming else 2.0)
-    rto_f = jnp.asarray(rto_mult, F32) * cc_params.trtt
-    credit_window = jnp.asarray(cfg.credit_window_mult * bdp, F32)
-
-    # ---- per-sender / per-receiver flow matrices ----
-    FMAX = max(int(np.max(np.bincount(wl.src, minlength=N))), 1)
-    FRMAX = max(int(np.max(np.bincount(wl.dst, minlength=N))), 1)
-    flows_of = np.full((N, FMAX), NF, np.int32)
-    cnt = np.zeros(N, np.int64)
-    for f in np.argsort(wl.order, kind="stable"):  # per-sender, ordered
-        s = wl.src[f]
-        flows_of[s, cnt[s]] = f
-        cnt[s] += 1
-    flows_by_recv = np.full((N, FRMAX), NF, np.int32)
-    cnt = np.zeros(N, np.int64)
-    for f in range(NF):
-        r = wl.dst[f]
-        flows_by_recv[r, cnt[r]] = f
-        cnt[r] += 1
-    flows_of = jnp.asarray(flows_of)
-    flows_by_recv = jnp.asarray(flows_by_recv)
-    window = int(min(wl.window, FMAX))
-
-    # ---- per-emitter routing constants ----
-    kind = jnp.asarray(topo.kind, I32)
-    e_rack = jnp.asarray(topo.rack, I32)
-    e_aux = jnp.asarray(topo.aux, I32)
-    # wire latency after departure, per emitter kind
-    lat_q = np.zeros(NE, np.int32)
-    lat_q[topo.kind == KIND_T0_UP] = link.link_lat_ticks + link.switch_lat_ticks
-    lat_q[topo.kind == KIND_T1_DOWN] = link.link_lat_ticks + link.switch_lat_ticks
-    lat_q[topo.kind == KIND_T0_DOWN] = link.link_lat_ticks
-    lat_q[topo.kind == KIND_SENDER] = 1 + link.link_lat_ticks + link.switch_lat_ticks
-    lat_q = jnp.asarray(lat_q)
-
-    # ---- fault maps ----
-    service_period = np.ones(NQ, np.int32)
-    dead = np.zeros(NQ, bool)
-    for (r, k, period) in cfg.faults:
-        q = topo.t0_up(r, k)
-        if period == 0:
-            dead[q] = True
-        else:
-            service_period[q] = period
-    service_period = jnp.asarray(service_period)
-    dead = jnp.asarray(dead)
-    fault_start = jnp.asarray(cfg.fault_start, I32)
-
-    kmin = 0.2 * CAP
-    kmax = 0.8 * CAP
-
-    mtu_i = int(MTU)
-
-    def pkt_size(flow, seq):
-        """True wire size of packet `seq` of `flow` (last packet may be short)."""
-        rem = size_f[jnp.clip(flow, 0, NF - 1)] - seq * mtu_i
-        return jnp.clip(rem, 0, mtu_i)
-
-    def route_from_queue(qidx, flow, ent):
-        d = dst[jnp.clip(flow, 0, NF - 1)]
-        drack = d // M
-        k, rk, ax = kind[qidx], e_rack[qidx], e_aux[qidx]
-        r_up = PU + ax * P + drack          # t0_up -> t1_down[spine, drack]
-        r_t1 = 2 * PU + d                   # t1_down -> t0_down[dst]
-        r_del = -(d + 1)                    # t0_down -> deliver
-        return jnp.where(k == KIND_T0_UP, r_up,
-                         jnp.where(k == KIND_T1_DOWN, r_t1, r_del))
-
-    def route_from_sender(f, ent):
-        sr = src[f] // M
-        d = dst[f]
-        h = (hashing.hash2(ent.astype(jnp.uint32), (sr * 0x9E37 + 0x1234).astype(jnp.uint32))
-             % jnp.uint32(U)).astype(I32)
-        return jnp.where(d // M == sr, 2 * PU + d, sr * U + h)
-
-    # ------------------------------------------------------------------
-    def init() -> SimState:
-        zeros = jnp.zeros
-        cc = init_cc_state(NF, cc_params,
-                           start_cwnd=cfg.start_cwnd_mult * bdp)
-        lb = reps.init_lb_state(NF, lb_params)
-        m = Metrics(*(zeros((), F32 if i in (7,) else I32) for i in range(8)),
-                    rtt_hist=zeros((HIST_BINS,), I32),
-                    q_sum=zeros((), F32), q_max=zeros((), I32),
-                    spurious_retx=zeros((), I32))
-        return SimState(
-            now=zeros((), I32),
-            salt=zeros((), I32),
-            q_fields=zeros((NQ + 1, CAP, 5), I32),
-            q_head=zeros((NQ + 1,), I32),
-            q_size=zeros((NQ + 1,), I32),
-            infl=zeros((L + 1, NE, 7), I32),
-            ack_ring=zeros((R, N, 6), I32),
-            trim_cnt=zeros((R, NF + 1), I32),
-            trim_bytes=zeros((R, NF + 1), F32),
-            lost_bits=zeros((R, NF + 1, WW), I32),
-            credit_ring=zeros((R, NF + 1), F32),
-            st_state=zeros((NF + 1, W), I32),
-            st_seq=zeros((NF + 1, W), I32),
-            st_ts=zeros((NF + 1, W), I32),
-            next_seq=zeros((NF,), I32),
-            done=zeros((NF,), bool),
-            fct=jnp.full((NF,), -1, I32),
-            goodput=zeros((NF,), I32),
-            bitmap=zeros((NF + 1, MAXW), I32),
-            granted=zeros((NF,), F32),
-            trim_seen=zeros((NF,), F32),
-            rr_recv=zeros((N,), I32),
-            rr_send=zeros((N,), I32),
-            pace_accum=zeros((NF,), F32),
-            cc=cc, lb=lb, m=m,
-        )
-
-    # ------------------------------------------------------------------
     def step(st: SimState) -> SimState:
-        t = st.now
-        m = st.m
+        return step_fn(consts, st)
 
-        # ============ 1. departures ============
-        qidx = jnp.arange(NQ, dtype=I32)
-        in_fault = t >= fault_start
-        svc = jnp.where(in_fault & (service_period > 1),
-                        (t % jnp.maximum(service_period, 1)) == 0, True)
-        active = (st.q_size[:NQ] > 0) & svc
-        head = st.q_head[:NQ]
-        hf = st.q_fields[qidx, head]                      # [NQ, 5]
-        d_flow, d_seq, d_ent, d_ecn, d_ts = (hf[:, i] for i in range(5))
-        # RED marking at dequeue (paper Sec. 2.1 / 3.5)
-        qsz = st.q_size[:NQ].astype(F32)
-        pmark = jnp.clip((qsz - kmin) / (kmax - kmin), 0.0, 1.0)
-        mark = hashing.uniform01(t * jnp.int32(131071) + qidx,
-                                 jnp.int32(0xECD) + st.salt) < pmark
-        d_ecn = d_ecn | (mark & active).astype(I32)
-        black = dead[qidx] & active & in_fault
-        emit = active & ~black
-        next_q = route_from_queue(qidx, d_flow, d_ent)
-        q_head = st.q_head.at[:NQ].set(jnp.where(active, (head + 1) % CAP, head))
-        q_size = st.q_size.at[:NQ].add(-active.astype(I32))
-        slot = jnp.where(emit, (t + lat_q[:NQ]) % L, L)
-        payload = jnp.stack(
-            [emit.astype(I32), next_q, d_flow, d_seq, d_ent, d_ecn, d_ts], axis=1)
-        infl = st.infl.at[slot, qidx].set(payload)
-        m = m._replace(n_black=m.n_black + jnp.sum(black.astype(I32)))
+    def init() -> SimState:
+        return init_state(dims, consts)
 
-        # ============ 2. arrivals ============
-        arr = infl[t % L]                                  # [NE, 7]
-        infl = infl.at[t % L].set(0)
-        a_valid = arr[:, 0] == 1
-        a_dstq, a_flow, a_seq, a_ent, a_ecn, a_ts = (arr[:, i] for i in range(1, 7))
-        deliver = a_valid & (a_dstq < 0)
-        enq = a_valid & (a_dstq >= 0)
-
-        # ---- deliveries ----
-        node = jnp.where(deliver, -a_dstq - 1, 0)
-        dflow = jnp.where(deliver, a_flow, NF)
-        word, bit = a_seq // 32, a_seq % 32
-        old = st.bitmap[dflow, word]
-        isnew = deliver & (((old >> bit) & 1) == 0)
-        bitmap = st.bitmap.at[dflow, word].add(
-            jnp.where(isnew, (1 << bit).astype(I32), 0))
-        psz = pkt_size(a_flow, a_seq)
-        goodput = st.goodput.at[jnp.where(isnew, a_flow, 0)].add(
-            jnp.where(isnew, psz, 0))
-        newly_done = (goodput >= size_f) & ~st.done
-        done = st.done | newly_done
-        fct = jnp.where(newly_done, t + ret_f - t_start, st.fct)
-        # ACK generation (echoes entropy + ECN + timestamp; priority path)
-        anode = jnp.where(deliver, node, N)
-        aslot = (t + ret_f[jnp.clip(a_flow, 0, NF - 1)]) % R
-        aslot = jnp.where(deliver, aslot, 0)
-        ack_payload = jnp.stack(
-            [deliver.astype(I32), a_flow, a_seq, a_ecn, a_ent, a_ts], axis=1)
-        ack_ring = jnp.pad(st.ack_ring, ((0, 0), (0, 1), (0, 0)))
-        ack_ring = ack_ring.at[aslot, anode].set(ack_payload)[:, :N]
-        m = m._replace(
-            delivered_pkts=m.delivered_pkts + jnp.sum(deliver.astype(I32)),
-            delivered_bytes=m.delivered_bytes + jnp.sum(jnp.where(isnew, psz, 0)).astype(F32),
-        )
-
-        # ---- enqueues (sorted scatter with capacity + trim) ----
-        edst = jnp.where(enq, a_dstq, NQ)
-        order = jnp.argsort(edst)
-        ds = edst[order]
-        eflow, eseq, eent, eecn, ets = (x[order] for x in (a_flow, a_seq, a_ent, a_ecn, a_ts))
-        first = jnp.searchsorted(ds, ds, side="left")
-        rank = jnp.arange(NE, dtype=first.dtype) - first
-        space = CAP - q_size[ds]
-        acc = (ds < NQ) & (rank < space)
-        pos = (q_head[ds] + q_size[ds] + rank.astype(I32)) % CAP
-        row = jnp.where(acc, ds, NQ)
-        posw = jnp.where(acc, pos, 0)
-        q_fields = st.q_fields.at[row, posw].set(
-            jnp.stack([eflow, eseq, eent, eecn, ets], axis=1))
-        q_size = q_size + jax.ops.segment_sum(acc.astype(I32), ds, num_segments=NQ + 1)
-        rej = (ds < NQ) & ~acc
-        # trim (paper: only when the buffer is full) or drop
-        rflow = jnp.where(rej, eflow, NF)
-        # receiver-side trim visibility (EQDS: trimmed headers reach the
-        # receiver, which re-schedules the pull — paper Sec. 2.2)
-        trim_seen = jnp.pad(st.trim_seen, (0, 1)).at[rflow].add(
-            jnp.where(rej, pkt_size(eflow, eseq).astype(F32), 0.0))[:NF]
-        if cfg.trimming:
-            tslot = jnp.where(rej, (t + tm.trim_delay) % R, 0)
-            trim_cnt = st.trim_cnt.at[tslot, rflow].add(rej.astype(I32))
-            trim_bytes = st.trim_bytes.at[tslot, rflow].add(
-                jnp.where(rej, pkt_size(eflow, eseq).astype(F32), 0.0))
-            wslot = (eseq % W) // 32
-            wbit = (eseq % W) % 32
-            lost_bits = st.lost_bits.at[tslot, rflow, wslot].add(
-                jnp.where(rej, (1 << wbit).astype(I32), 0))
-            m = m._replace(n_trim=m.n_trim + jnp.sum(rej.astype(I32)))
-        else:
-            trim_cnt, trim_bytes, lost_bits = st.trim_cnt, st.trim_bytes, st.lost_bits
-            m = m._replace(n_drop=m.n_drop + jnp.sum(rej.astype(I32)))
-
-        # ============ 3. control events ============
-        acks = ack_ring[t % R]                             # [N, 6]
-        ack_ring = ack_ring.at[t % R].set(0)
-        v = acks[:, 0] == 1
-        idxf = jnp.where(v, acks[:, 1], NF)
-
-        def scat(vals, fill=0):
-            return jnp.full((NF + 1,), fill, vals.dtype).at[idxf].set(vals)[:NF]
-
-        has_ack = jnp.zeros((NF + 1,), bool).at[idxf].set(v)[:NF]
-        ack_seq = scat(acks[:, 2])
-        ack_ecn = jnp.zeros((NF + 1,), bool).at[idxf].set(acks[:, 3] == 1)[:NF]
-        ack_ent = scat(acks[:, 4])
-        ack_ts = scat(acks[:, 5])
-        rtt = jnp.where(has_ack, (t - ack_ts).astype(F32), 0.0)
-        ack_bytes = jnp.where(has_ack, pkt_size(flow_ids, ack_seq).astype(F32), 0.0)
-
-        trims = trim_cnt[t % R][:NF]
-        tbytes = trim_bytes[t % R][:NF]
-        lbits = lost_bits[t % R][:NF]
-        cred = credit_ring_now = st.credit_ring[t % R][:NF]
-        trim_cnt = trim_cnt.at[t % R].set(0)
-        trim_bytes = trim_bytes.at[t % R].set(0.0)
-        lost_bits = lost_bits.at[t % R].set(0)
-        credit_ring = st.credit_ring.at[t % R].set(0.0)
-
-        # transport: free the ACKed slot
-        aslot2 = ack_seq % W
-        cur = st.st_state[flow_ids, aslot2]
-        cur_seq = st.st_seq[flow_ids, aslot2]
-        match = has_ack & (cur != 0) & (cur_seq == ack_seq)
-        st_state = st.st_state.at[flow_ids, aslot2].set(jnp.where(match, 0, cur))
-
-        # trimmed packets -> lost (awaiting retransmission)
-        wbits = jnp.arange(W, dtype=I32)
-        bitsel = (lbits[:, wbits // 32] >> (wbits % 32)) & 1      # [NF, W]
-        lost_mask = (bitsel == 1) & (st_state[:NF] == 1)
-        st_state = st_state.at[:NF].set(jnp.where(lost_mask, 3, st_state[:NF]))
-
-        # timeouts
-        started_flows = (t >= t_start) & ~done
-        to_mask = (st_state[:NF] == 1) & \
-            ((t - st.st_ts[:NF]).astype(F32) > rto_f[:, None]) & started_flows[:, None]
-        # count a spurious retx when the receiver already has the packet
-        sp_word = st.st_seq[:NF] // 32
-        sp_bit = st.st_seq[:NF] % 32
-        already = ((bitmap[:NF][jnp.arange(NF)[:, None], sp_word] >> sp_bit) & 1) == 1
-        m = m._replace(spurious_retx=m.spurious_retx
-                       + jnp.sum((to_mask & already).astype(I32)))
-        st_state = st_state.at[:NF].set(jnp.where(to_mask, 3, st_state[:NF]))
-        n_to = jnp.sum(to_mask.astype(I32), axis=1)
-        to_bytes = n_to.astype(F32) * MTU
-        m = m._replace(n_to=m.n_to + jnp.sum(n_to))
-
-        unacked = jnp.sum((st_state[:NF] == 1).astype(I32), axis=1).astype(F32) * MTU
-
-        ev = CCEvent(
-            has_ack=has_ack, ack_bytes=ack_bytes, ecn=ack_ecn, rtt=rtt,
-            ack_entropy=ack_ent, n_trims=trims, trim_bytes=tbytes,
-            n_timeouts=n_to, to_bytes=to_bytes, unacked=unacked,
-            credit_grant=cred,
-        )
-        cc = cc_update(cc_params, st.cc, ev, t)
-        lb = reps.on_ack(lb_mode, lb_params, st.lb, has_ack, ack_ecn, ack_ent,
-                         flow_ids, t)
-        # RTT histogram
-        bins = jnp.clip((rtt * (8.0 / tm.brtt_inter)).astype(I32), 0, HIST_BINS - 1)
-        m = m._replace(
-            rtt_hist=m.rtt_hist.at[jnp.where(has_ack, bins, 0)].add(has_ack.astype(I32)),
-            n_ack=m.n_ack + jnp.sum(has_ack.astype(I32)),
-        )
-
-        # ============ 4. EQDS receiver credit grants ============
-        granted = st.granted
-        rr_recv = st.rr_recv
-        if credit_based:
-            # outstanding credit window above received + known-lost bytes:
-            # self-clocks, and re-grants for trimmed packets (the receiver
-            # sees trimmed headers) so retransmissions never starve.
-            demand = started_flows & (
-                granted - goodput.astype(F32) - trim_seen < credit_window)
-            dm = jnp.pad(demand, (0, 1))[flows_by_recv]          # [N, FR]
-            keys = (jnp.arange(FRMAX, dtype=I32)[None, :] - rr_recv[:, None]) % FRMAX
-            keys = jnp.where(dm, keys, FRMAX + 1)
-            sel = jnp.argmin(keys, axis=1)
-            has_g = jnp.any(dm, axis=1)
-            gflow = jnp.where(has_g, flows_by_recv[jnp.arange(N), sel], NF)
-            gslot = jnp.where(has_g, (t + ret_f[jnp.clip(gflow, 0, NF - 1)]) % R, 0)
-            credit_ring = credit_ring.at[gslot, gflow].add(
-                jnp.where(has_g, MTU, 0.0))
-            granted = jnp.pad(granted, (0, 1)).at[gflow].add(
-                jnp.where(has_g, MTU, 0.0))[:NF]
-            rr_recv = jnp.where(has_g, (sel.astype(I32) + 1) % FRMAX, rr_recv)
-
-        # ============ 5. sends ============
-        pace = st.pace_accum
-        if paced:
-            pace = jnp.minimum(pace + cc.pacing_rate, 4.0 * MTU)
-
-        # windowed-alltoall eligibility: < window unfinished predecessors
-        done_p = jnp.pad(done, (0, 1), constant_values=True)
-        unfin = (~done_p[flows_of]) & (flows_of < NF)            # [N, FMAX]
-        prior_unfin = jnp.cumsum(unfin, axis=1) - unfin.astype(I32)
-        win_elig = jnp.full((NF + 1,), False).at[flows_of.reshape(-1)].set(
-            (prior_unfin < window).reshape(-1))[:NF]
-
-        started = (t >= t_start) & ~done & win_elig
-        has_retx = jnp.any(st_state[:NF] == 3, axis=1)
-        retx_slot = jnp.argmax(st_state[:NF] == 3, axis=1)
-        retx_seq = st.st_seq[flow_ids, retx_slot]
-        new_seq = st.next_seq
-        new_slot = new_seq % W
-        new_ok = (new_seq * mtu_i < size_f) & (st_state[flow_ids, new_slot] == 0)
-        seq_emit = jnp.where(has_retx, retx_seq, new_seq)
-        nsize = pkt_size(flow_ids, seq_emit).astype(F32)
-        win_ok = unacked + nsize <= cc.cwnd
-        credit_ok = True
-        if credit_based:
-            credit_ok = (cc.credits >= nsize) | (cc.spec_budget >= nsize)
-        pace_ok = (pace >= nsize) if paced else True
-        elig = started & (has_retx | new_ok) & win_ok & credit_ok & pace_ok & (nsize > 0)
-
-        # per-sender round-robin arbitration (one packet per NIC per tick)
-        E = jnp.pad(elig, (0, 1))[flows_of]                      # [N, FMAX]
-        keys = (jnp.arange(FMAX, dtype=I32)[None, :] - st.rr_send[:, None]) % FMAX
-        keys = jnp.where(E, keys, FMAX + 1)
-        sel = jnp.argmin(keys, axis=1)
-        has_s = jnp.any(E, axis=1)
-        sflow = jnp.where(has_s, flows_of[jnp.arange(N), sel], NF)
-        rr_send = jnp.where(has_s, (sel.astype(I32) + 1) % FMAX, st.rr_send)
-
-        emit_mask = jnp.zeros((NF + 1,), bool).at[sflow].set(has_s)[:NF]
-        lb, entropy = reps.on_send(lb_mode, lb_params, lb, emit_mask, seq_emit,
-                                   flow_ids, t)
-        first_q = route_from_sender(flow_ids, entropy)
-
-        # place on the wire
-        send_slot = jnp.where(has_s, (t + lat_q[NQ]) % L, L)
-        sf = jnp.clip(sflow, 0, NF - 1)
-        spay = jnp.stack([
-            has_s.astype(I32),
-            first_q[sf],
-            sflow,
-            seq_emit[sf],
-            entropy[sf],
-            jnp.zeros((N,), I32),
-            jnp.full((N,), 1, I32) * t,
-        ], axis=1)
-        infl = infl.at[send_slot, NQ + jnp.arange(N)].set(spay)
-
-        # sent-ring bookkeeping
-        eslot = seq_emit % W
-        eflow2 = jnp.where(emit_mask, flow_ids, NF)
-        st_state = st_state.at[eflow2, eslot].set(
-            jnp.where(emit_mask, 1, st_state[eflow2, eslot]))
-        st_seq = st.st_seq.at[eflow2, eslot].set(
-            jnp.where(emit_mask, seq_emit, st.st_seq[eflow2, eslot]))
-        st_ts = st.st_ts.at[eflow2, eslot].set(
-            jnp.where(emit_mask, t, st.st_ts[eflow2, eslot]))
-        is_new_send = emit_mask & ~has_retx
-        next_seq = st.next_seq + is_new_send.astype(I32)
-        m = m._replace(n_retx=m.n_retx + jnp.sum((emit_mask & has_retx).astype(I32)))
-
-        spend = jnp.where(emit_mask, nsize, 0.0)
-        if credit_based:
-            use_credit = cc.credits >= nsize
-            cc = cc._replace(
-                credits=cc.credits - spend * use_credit,
-                spec_budget=cc.spec_budget - spend * (~use_credit),
-            )
-        if paced:
-            pace = pace - spend
-
-        # ============ 6. metrics ============
-        m = m._replace(
-            q_sum=m.q_sum + jnp.sum(q_size[:NQ]).astype(F32),
-            q_max=jnp.maximum(m.q_max, jnp.max(q_size[:NQ])),
-        )
-
-        return SimState(
-            now=t + 1, salt=st.salt,
-            q_fields=q_fields, q_head=q_head, q_size=q_size,
-            infl=infl, ack_ring=ack_ring, trim_cnt=trim_cnt,
-            trim_bytes=trim_bytes, lost_bits=lost_bits, credit_ring=credit_ring,
-            st_state=st_state, st_seq=st_seq, st_ts=st_ts, next_seq=next_seq,
-            done=done, fct=fct, goodput=goodput, bitmap=bitmap,
-            granted=granted, trim_seen=trim_seen, rr_recv=rr_recv, rr_send=rr_send,
-            pace_accum=pace, cc=cc, lb=lb, m=m,
-        )
-
-    dims = dict(N=N, NQ=NQ, NE=NE, NF=NF, CAP=CAP, W=W, R=R, L=L,
-                MAXW=MAXW, FMAX=FMAX, FRMAX=FRMAX,
-                brtt=tm.brtt_inter, bdp_bytes=bdp, mtu=mtu_i)
-    return Sim(cfg=cfg, topo=topo, timing=tm, wl=wl, cc_params=cc_params,
-               lb_params=lb_params, dims=dims, step=step, init=init)
+    return Sim(cfg=cfg, topo=topo, timing=tm, wl=wl, cc_params=consts.cc,
+               lb_params=consts.lb, dims=dims, consts=consts,
+               step_fn=step_fn, step=step, init=init)
 
 
 # --------------------------------------------------------------------------
@@ -662,47 +153,3 @@ def _run_trace(step, state0: SimState, ticks: int, trace_flows: int):
         return st2, ys
 
     return jax.lax.scan(body, state0, None, length=ticks)
-
-
-# --------------------------------------------------------------------------
-# result extraction
-# --------------------------------------------------------------------------
-
-
-def summarize(sim: Sim, st: SimState) -> dict:
-    """Pull host-side summary statistics from a finished run."""
-    fct = np.asarray(st.fct)
-    done = np.asarray(st.done)
-    mtu = sim.dims["mtu"]
-    m = st.m
-    out = dict(
-        ticks=int(st.now),
-        all_done=bool(done.all()),
-        n_done=int(done.sum()),
-        fct_ticks=fct,
-        fct_max=int(fct.max()) if done.any() else -1,
-        fct_min=int(fct[done].min()) if done.any() else -1,
-        fct_mean=float(fct[done].mean()) if done.any() else -1.0,
-        fct_p99=float(np.percentile(fct[done], 99)) if done.any() else -1.0,
-        spread=float(fct[done].max() - fct[done].min()) if done.any() else -1.0,
-        trims=int(m.n_trim), drops=int(m.n_drop), blackholed=int(m.n_black),
-        timeouts=int(m.n_to), retx=int(m.n_retx), acks=int(m.n_ack),
-        delivered_bytes=float(m.delivered_bytes),
-        spurious_retx=int(m.spurious_retx),
-        rtt_hist=np.asarray(m.rtt_hist),
-        q_mean=float(m.q_sum) / max(1, int(st.now)) / sim.dims["NQ"],
-        q_max=int(m.q_max),
-        goodput_bytes=np.asarray(st.goodput),
-    )
-    total_pkts = max(1, int(m.delivered_pkts))
-    out["spurious_frac"] = out["spurious_retx"] / total_pkts
-    # ideal completion: bytes through the tightest static bottleneck
-    out["mtu"] = mtu
-    return out
-
-
-def jain_fairness(values: np.ndarray) -> float:
-    v = np.asarray(values, np.float64)
-    if v.sum() == 0:
-        return 1.0
-    return float(v.sum() ** 2 / (len(v) * (v ** 2).sum()))

@@ -1,0 +1,169 @@
+"""Phases 1-2 of the tick — the switching fabric.
+
+  1. ``departures``: dequeue head per port, RED dequeue-marking, route,
+     blackhole on failed links, place on the wire
+  2. ``arrivals``:  packets landing now -> enqueue (trim/drop on overflow)
+     or deliver (receiver dedupe, ACK generation)
+
+Both are pure ``(Dims, Consts, SimState) -> SimState``; they communicate
+with the rest of the pipeline only through ``SimState`` fields (the wire
+ring ``infl``, the delayed control rings, and the receiver ledgers).
+Routing is purely functional over the per-emitter constants in ``Consts``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.netsim import hashing
+from repro.netsim.state import Consts, Dims, SimState, pkt_size
+from repro.netsim.topology import KIND_T0_UP, KIND_T1_DOWN
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def route_from_queue(dims: Dims, consts: Consts, qidx, flow):
+    """Next queue for a packet departing fabric port ``qidx`` (negative ids
+    encode delivery to node -(id+1))."""
+    d = consts.dst[jnp.clip(flow, 0, dims.NF - 1)]
+    drack = d // dims.M
+    k, ax = consts.kind[qidx], consts.e_aux[qidx]
+    r_up = dims.PU + ax * dims.P + drack    # t0_up -> t1_down[spine, drack]
+    r_t1 = 2 * dims.PU + d                  # t1_down -> t0_down[dst]
+    r_del = -(d + 1)                        # t0_down -> deliver
+    return jnp.where(k == KIND_T0_UP, r_up,
+                     jnp.where(k == KIND_T1_DOWN, r_t1, r_del))
+
+
+def route_from_sender(dims: Dims, consts: Consts, f, ent):
+    """First queue for a fresh packet of flow ``f`` carrying entropy ``ent``
+    (ECMP uplink hash, same-rack shortcut)."""
+    sr = consts.src[f] // dims.M
+    d = consts.dst[f]
+    h = (hashing.hash2(ent.astype(jnp.uint32),
+                       (sr * 0x9E37 + 0x1234).astype(jnp.uint32))
+         % jnp.uint32(dims.U)).astype(I32)
+    return jnp.where(d // dims.M == sr, 2 * dims.PU + d, sr * dims.U + h)
+
+
+def departures(dims: Dims, consts: Consts, st: SimState) -> SimState:
+    """Phase 1: one head-of-line packet per active port onto the wire."""
+    t = st.now
+    m = st.m
+    NQ, CAP, L = dims.NQ, dims.CAP, dims.L
+
+    qidx = jnp.arange(NQ, dtype=I32)
+    in_fault = t >= consts.fault_start
+    svc = jnp.where(in_fault & (consts.service_period > 1),
+                    (t % jnp.maximum(consts.service_period, 1)) == 0, True)
+    active = (st.q_size[:NQ] > 0) & svc
+    head = st.q_head[:NQ]
+    hf = st.q_fields[qidx, head]                      # [NQ, 5]
+    d_flow, d_seq, d_ent, d_ecn, d_ts = (hf[:, i] for i in range(5))
+    # RED marking at dequeue (paper Sec. 2.1 / 3.5)
+    qsz = st.q_size[:NQ].astype(F32)
+    pmark = jnp.clip((qsz - consts.kmin) / consts.kspan, 0.0, 1.0)
+    mark = hashing.uniform01(t * jnp.int32(131071) + qidx,
+                             jnp.int32(0xECD) + st.salt) < pmark
+    d_ecn = d_ecn | (mark & active).astype(I32)
+    black = consts.dead[qidx] & active & in_fault
+    emit = active & ~black
+    next_q = route_from_queue(dims, consts, qidx, d_flow)
+    q_head = st.q_head.at[:NQ].set(jnp.where(active, (head + 1) % CAP, head))
+    q_size = st.q_size.at[:NQ].add(-active.astype(I32))
+    slot = jnp.where(emit, (t + consts.lat_q[:NQ]) % L, L)
+    payload = jnp.stack(
+        [emit.astype(I32), next_q, d_flow, d_seq, d_ent, d_ecn, d_ts], axis=1)
+    infl = st.infl.at[slot, qidx].set(payload)
+    m = m._replace(n_black=m.n_black + jnp.sum(black.astype(I32)))
+    return st._replace(q_head=q_head, q_size=q_size, infl=infl, m=m)
+
+
+def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
+    """Phase 2: land this tick's wire slot — deliver at the edge (dedupe,
+    ACK generation) or enqueue mid-fabric (trim/drop on overflow)."""
+    t = st.now
+    m = st.m
+    NF, NQ, NE, N = dims.NF, dims.NQ, dims.NE, dims.N
+    CAP, L, R = dims.CAP, dims.L, dims.R
+
+    arr = st.infl[t % L]                               # [NE, 7]
+    infl = st.infl.at[t % L].set(0)
+    a_valid = arr[:, 0] == 1
+    a_dstq, a_flow, a_seq, a_ent, a_ecn, a_ts = (arr[:, i] for i in range(1, 7))
+    deliver = a_valid & (a_dstq < 0)
+    enq = a_valid & (a_dstq >= 0)
+
+    # ---- deliveries ----
+    node = jnp.where(deliver, -a_dstq - 1, 0)
+    dflow = jnp.where(deliver, a_flow, NF)
+    word, bit = a_seq // 32, a_seq % 32
+    old = st.bitmap[dflow, word]
+    isnew = deliver & (((old >> bit) & 1) == 0)
+    bitmap = st.bitmap.at[dflow, word].add(
+        jnp.where(isnew, (1 << bit).astype(I32), 0))
+    psz = pkt_size(dims, consts, a_flow, a_seq)
+    goodput = st.goodput.at[jnp.where(isnew, a_flow, 0)].add(
+        jnp.where(isnew, psz, 0))
+    newly_done = (goodput >= consts.size) & ~st.done
+    done = st.done | newly_done
+    fct = jnp.where(newly_done, t + consts.ret - consts.t_start, st.fct)
+    # ACK generation (echoes entropy + ECN + timestamp; priority path).
+    # Non-delivering emitters write into the pre-sized sentinel column N.
+    anode = jnp.where(deliver, node, N)
+    aslot = (t + consts.ret[jnp.clip(a_flow, 0, NF - 1)]) % R
+    aslot = jnp.where(deliver, aslot, 0)
+    ack_payload = jnp.stack(
+        [deliver.astype(I32), a_flow, a_seq, a_ecn, a_ent, a_ts], axis=1)
+    ack_ring = st.ack_ring.at[aslot, anode].set(ack_payload)
+    m = m._replace(
+        delivered_pkts=m.delivered_pkts + jnp.sum(deliver.astype(I32)),
+        delivered_bytes=m.delivered_bytes + jnp.sum(jnp.where(isnew, psz, 0)).astype(F32),
+    )
+
+    # ---- enqueues (sorted scatter with capacity + trim) ----
+    q_head, q_size = st.q_head, st.q_size
+    edst = jnp.where(enq, a_dstq, NQ)
+    order = jnp.argsort(edst)
+    ds = edst[order]
+    eflow, eseq, eent, eecn, ets = (x[order] for x in (a_flow, a_seq, a_ent, a_ecn, a_ts))
+    first = jnp.searchsorted(ds, ds, side="left")
+    rank = jnp.arange(NE, dtype=first.dtype) - first
+    space = CAP - q_size[ds]
+    acc = (ds < NQ) & (rank < space)
+    pos = (q_head[ds] + q_size[ds] + rank.astype(I32)) % CAP
+    row = jnp.where(acc, ds, NQ)
+    posw = jnp.where(acc, pos, 0)
+    q_fields = st.q_fields.at[row, posw].set(
+        jnp.stack([eflow, eseq, eent, eecn, ets], axis=1))
+    q_size = q_size + jax.ops.segment_sum(acc.astype(I32), ds, num_segments=NQ + 1)
+    rej = (ds < NQ) & ~acc
+    # trim (paper: only when the buffer is full) or drop
+    rflow = jnp.where(rej, eflow, NF)
+    # receiver-side trim visibility (EQDS: trimmed headers reach the
+    # receiver, which re-schedules the pull — paper Sec. 2.2)
+    trim_seen = jnp.pad(st.trim_seen, (0, 1)).at[rflow].add(
+        jnp.where(rej, pkt_size(dims, consts, eflow, eseq).astype(F32), 0.0))[:NF]
+    if dims.trimming:
+        W = dims.W
+        tslot = jnp.where(rej, (t + consts.trim_delay) % R, 0)
+        trim_cnt = st.trim_cnt.at[tslot, rflow].add(rej.astype(I32))
+        trim_bytes = st.trim_bytes.at[tslot, rflow].add(
+            jnp.where(rej, pkt_size(dims, consts, eflow, eseq).astype(F32), 0.0))
+        wslot = (eseq % W) // 32
+        wbit = (eseq % W) % 32
+        lost_bits = st.lost_bits.at[tslot, rflow, wslot].add(
+            jnp.where(rej, (1 << wbit).astype(I32), 0))
+        m = m._replace(n_trim=m.n_trim + jnp.sum(rej.astype(I32)))
+    else:
+        trim_cnt, trim_bytes, lost_bits = st.trim_cnt, st.trim_bytes, st.lost_bits
+        m = m._replace(n_drop=m.n_drop + jnp.sum(rej.astype(I32)))
+
+    return st._replace(
+        infl=infl, bitmap=bitmap, goodput=goodput, done=done, fct=fct,
+        ack_ring=ack_ring, q_fields=q_fields, q_size=q_size,
+        trim_seen=trim_seen, trim_cnt=trim_cnt, trim_bytes=trim_bytes,
+        lost_bits=lost_bits, m=m,
+    )

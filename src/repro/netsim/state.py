@@ -1,0 +1,346 @@
+"""Typed simulator state, configuration, and build-time derivation.
+
+This module owns every container the phase pipeline operates on:
+
+  ``SimConfig``  user-facing knobs (dataclass; static + numeric mixed)
+  ``Dims``       static shape/branch facts (Python ints/bools — hashable,
+                 safe to close over in jitted code; changing any retraces)
+  ``Consts``     *traced* numeric constants (a jax pytree — changing any
+                 value, e.g. a CC parameter or the RED thresholds, reuses
+                 the compiled step; ``netsim/sweep.py`` vmaps over a batch
+                 of these for one-compile parameter sweeps)
+  ``SimState``   the per-tick mutable world
+
+``derive(cfg, wl)`` maps a config+workload onto (topology, timing, Dims,
+Consts); ``init_state(dims, consts)`` produces the tick-0 world.  The six
+tick phases in ``fabric``/``transport``/``sender``/``metrics`` are pure
+functions ``(Dims, Consts, SimState) -> SimState`` composed by
+``engine.build``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry, reps
+from repro.core.types import CCParams, CCState, init_cc_state, make_cc_params
+from repro.netsim.metrics import Metrics, init_metrics
+from repro.netsim.topology import (KIND_SENDER, KIND_T0_DOWN, KIND_T0_UP,
+                                   KIND_T1_DOWN, build_topology)
+from repro.netsim.units import (FatTreeConfig, LinkConfig, Timing,
+                                derive_timing, gamma)
+from repro.netsim.workloads import Workload
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    link: LinkConfig = LinkConfig()
+    tree: FatTreeConfig = FatTreeConfig()
+    algo: str = "smartt"
+    cc_backend: str = "jnp"          # "jnp" | "pallas" (kernels/cc_update)
+    lb: str = "reps"
+    trimming: bool = True
+    rto_mult: float = 0.0            # RTO = rto_mult * trtt; 0 = auto
+                                     # (3.0 with trimming, 2.0 aggressive without)
+    num_entropies: int = 256
+    react_every: int = 1             # CC reaction granularity (Fig. 3b)
+    credit_window_mult: float = 1.0  # EQDS outstanding-credit window (BDPs)
+    start_cwnd_mult: float = 1.25    # initial window as fraction of BDP
+    kmin_frac: float = 0.2           # RED thresholds as fraction of port buffer
+    kmax_frac: float = 0.8
+    # fault injection (Fig. 7): ((rack, uplink, period), ...) — period 2 =
+    # half-rate link, period 0 = dead link (blackholes traffic)
+    faults: tuple = ()
+    fault_start: int = 0
+    cc_overrides: tuple = ()         # (("fd", 0.5), ...) applied to CCParams
+
+
+# --------------------------------------------------------------------------
+# static dimensions / branch selectors
+# --------------------------------------------------------------------------
+
+
+class Dims(NamedTuple):
+    """Shape- and branch-determining facts.  All plain Python scalars:
+    hashable, compared by value, safe as closed-over constants under jit."""
+
+    N: int          # nodes
+    NQ: int         # queues (output ports)
+    NE: int         # emitters (queues + sender NICs)
+    NF: int         # flows
+    CAP: int        # per-port queue capacity (packets)
+    W: int          # sent-ring slots per flow
+    WW: int         # W // 32 loss-bitmap words
+    L: int          # wire-latency ring length
+    R: int          # control-return ring length
+    MAXW: int       # receiver dedupe bitmap words
+    FMAX: int       # max flows per sender
+    FRMAX: int      # max flows per receiver
+    P: int          # racks
+    U: int          # uplinks (spines)
+    M: int          # nodes per rack
+    PU: int         # P * U
+    window: int     # windowed-alltoall eligibility window
+    mtu: int        # bytes
+    brtt_inter: int  # base RTT ticks == BDP packets
+    bdp_bytes: float
+    trimming: bool
+    credit_based: bool
+    paced: bool
+    lb_mode: int
+
+
+# --------------------------------------------------------------------------
+# traced constants
+# --------------------------------------------------------------------------
+
+
+class Consts(NamedTuple):
+    """Numeric constants the compiled step closes over *as traced values*.
+
+    Everything here may vary between runs of the same compiled step —
+    that is what makes the batched config sweep one compilation.
+    """
+
+    src: jnp.ndarray             # i32 [NF]
+    dst: jnp.ndarray             # i32 [NF]
+    size: jnp.ndarray            # i32 [NF] flow bytes
+    t_start: jnp.ndarray         # i32 [NF]
+    ret: jnp.ndarray             # i32 [NF] ACK return latency
+    flows_of: jnp.ndarray        # i32 [N, FMAX] per-sender flow table
+    flows_by_recv: jnp.ndarray   # i32 [N, FRMAX]
+    kind: jnp.ndarray            # i32 [NE] emitter kind
+    e_aux: jnp.ndarray           # i32 [NE] spine/rack/node auxiliary index
+    lat_q: jnp.ndarray           # i32 [NE] post-departure wire latency
+    service_period: jnp.ndarray  # i32 [NQ] degraded-link service period
+    dead: jnp.ndarray            # bool [NQ]
+    fault_start: jnp.ndarray     # i32 scalar
+    trim_delay: jnp.ndarray      # i32 scalar
+    kmin: jnp.ndarray            # f32 scalar RED lower threshold (packets)
+    kspan: jnp.ndarray           # f32 scalar RED kmax - kmin
+    rto: jnp.ndarray             # f32 [NF]
+    credit_window: jnp.ndarray   # f32 scalar (EQDS)
+    start_cwnd: jnp.ndarray      # f32 scalar initial cwnd bytes
+    cc: CCParams
+    lb: reps.LBParams
+
+
+def pkt_size(dims: Dims, consts: Consts, flow, seq):
+    """True wire size of packet `seq` of `flow` (last packet may be short)."""
+    rem = consts.size[jnp.clip(flow, 0, dims.NF - 1)] - seq * dims.mtu
+    return jnp.clip(rem, 0, dims.mtu)
+
+
+# --------------------------------------------------------------------------
+# state
+# --------------------------------------------------------------------------
+
+
+class SimState(NamedTuple):
+    now: jnp.ndarray                 # i32 scalar
+    salt: jnp.ndarray                # i32 scalar — per-run hash decorrelation
+    q_fields: jnp.ndarray            # i32 [NQ+1, CAP, 5] flow/seq/ent/ecn/ts
+    q_head: jnp.ndarray              # i32 [NQ+1]
+    q_size: jnp.ndarray              # i32 [NQ+1]
+    infl: jnp.ndarray                # i32 [L+1, NE, 7] valid/dstq/flow/seq/ent/ecn/ts
+    ack_ring: jnp.ndarray            # i32 [R, N+1, 6] valid/flow/seq/ecn/ent/ts
+                                     #   (column N is a write-off sentinel)
+    trim_cnt: jnp.ndarray            # i32 [R, NF+1]
+    trim_bytes: jnp.ndarray          # f32 [R, NF+1]
+    lost_bits: jnp.ndarray           # i32 [R, NF+1, WW]
+    credit_ring: jnp.ndarray         # f32 [R, NF+1]
+    st_state: jnp.ndarray            # i32 [NF+1, W] 0=free 1=outstanding 3=lost
+    st_seq: jnp.ndarray              # i32 [NF+1, W]
+    st_ts: jnp.ndarray               # i32 [NF+1, W]
+    next_seq: jnp.ndarray            # i32 [NF]
+    unacked: jnp.ndarray             # f32 [NF] in-flight bytes (phase 3 -> 5)
+    done: jnp.ndarray                # bool [NF]
+    fct: jnp.ndarray                 # i32 [NF] (-1 = unfinished)
+    goodput: jnp.ndarray             # i32 [NF] unique bytes delivered
+    bitmap: jnp.ndarray              # i32 [NF+1, MAXW] receiver dedupe
+    granted: jnp.ndarray             # f32 [NF] EQDS credit issued
+    trim_seen: jnp.ndarray           # f32 [NF] trimmed bytes observed by receiver
+    rr_recv: jnp.ndarray             # i32 [N]
+    rr_send: jnp.ndarray             # i32 [N]
+    pace_accum: jnp.ndarray          # f32 [NF]
+    cc: CCState
+    lb: reps.LBState
+    m: Metrics
+
+
+# --------------------------------------------------------------------------
+# derivation
+# --------------------------------------------------------------------------
+
+
+def derive(cfg: SimConfig, wl: Workload):
+    """Map (config, workload) -> (Topology, Timing, Dims, Consts)."""
+    link, tree = cfg.link, cfg.tree
+    topo = build_topology(tree)
+    tm = derive_timing(link)
+
+    N, NQ, NE = tree.n_nodes, topo.n_queues, topo.n_emitters
+    NF = wl.n_flows
+    MTU = float(link.mtu_bytes)
+    CAP = int(tm.brtt_inter)                      # 1 BDP per port queue
+    # sent-ring slots: 1.5x the max window in packets (seq-range headroom;
+    # new sends block on occupied slots, modeling a bounded retx buffer)
+    W = int(2 ** np.ceil(np.log2(max(1.5 * 1.25 * tm.brtt_inter, 32))))
+    WW = W // 32
+    L = tm.hop + 2
+    R = int(max(tm.ret_inter, tm.trim_delay) + tm.hop + 4)
+    max_pkts = int(np.ceil(wl.size.max() / MTU))
+    MAXW = (max_pkts + 31) // 32
+    P, U, M = tree.racks, tree.uplinks, tree.nodes_per_rack
+
+    if np.any(wl.src == wl.dst):
+        raise ValueError("flow with src == dst")
+
+    # ---- per-flow constants ----
+    # ACK return delay is constant per receiver: the ack ring is indexed
+    # (arrival_tick + ret, receiver) and a receiver delivers one packet per
+    # tick, so a *constant* return delay guarantees collision-free slots.
+    inter = (wl.src // M) != (wl.dst // M)
+    brtt_f = np.where(inter, tm.brtt_inter,
+                      tm.fwd_intra + tm.ret_inter).astype(np.float32)
+    ret_f = jnp.full(NF, tm.ret_inter, I32)
+
+    bdp = float(tm.brtt_inter * MTU)
+    cc_kwargs = dict(cfg.cc_overrides)
+    cc_params = make_cc_params(
+        mtu=MTU, bdp=bdp, brtt=brtt_f,
+        react_every=cfg.react_every,
+        gamma=gamma(link, tm),
+        use_trimming=cfg.trimming,
+        **cc_kwargs,
+    )
+    lb_params = reps.make_lb_params(
+        num_entropies=cfg.num_entropies,
+        bdp_pkts=int(tm.brtt_inter),
+    )
+    rto_mult = cfg.rto_mult or (3.0 if cfg.trimming else 2.0)
+    rto_f = jnp.asarray(rto_mult, F32) * cc_params.trtt
+    credit_window = jnp.asarray(cfg.credit_window_mult * bdp, F32)
+
+    # ---- per-sender / per-receiver flow matrices ----
+    FMAX = max(int(np.max(np.bincount(wl.src, minlength=N))), 1)
+    FRMAX = max(int(np.max(np.bincount(wl.dst, minlength=N))), 1)
+    flows_of = np.full((N, FMAX), NF, np.int32)
+    cnt = np.zeros(N, np.int64)
+    for f in np.argsort(wl.order, kind="stable"):  # per-sender, ordered
+        s = wl.src[f]
+        flows_of[s, cnt[s]] = f
+        cnt[s] += 1
+    flows_by_recv = np.full((N, FRMAX), NF, np.int32)
+    cnt = np.zeros(N, np.int64)
+    for f in range(NF):
+        r = wl.dst[f]
+        flows_by_recv[r, cnt[r]] = f
+        cnt[r] += 1
+    window = int(min(wl.window, FMAX))
+
+    # ---- per-emitter routing constants ----
+    # wire latency after departure, per emitter kind
+    lat_q = np.zeros(NE, np.int32)
+    lat_q[topo.kind == KIND_T0_UP] = link.link_lat_ticks + link.switch_lat_ticks
+    lat_q[topo.kind == KIND_T1_DOWN] = link.link_lat_ticks + link.switch_lat_ticks
+    lat_q[topo.kind == KIND_T0_DOWN] = link.link_lat_ticks
+    lat_q[topo.kind == KIND_SENDER] = 1 + link.link_lat_ticks + link.switch_lat_ticks
+
+    # ---- fault maps ----
+    service_period = np.ones(NQ, np.int32)
+    dead = np.zeros(NQ, bool)
+    for (r, k, period) in cfg.faults:
+        q = topo.t0_up(r, k)
+        if period == 0:
+            dead[q] = True
+        else:
+            service_period[q] = period
+    if not cfg.kmax_frac > cfg.kmin_frac:
+        raise ValueError(
+            f"RED thresholds need kmax_frac > kmin_frac, got "
+            f"{cfg.kmin_frac} .. {cfg.kmax_frac}")
+    kmin = cfg.kmin_frac * CAP
+    kmax = cfg.kmax_frac * CAP
+
+    dims = Dims(
+        N=N, NQ=NQ, NE=NE, NF=NF, CAP=CAP, W=W, WW=WW, L=L, R=R,
+        MAXW=MAXW, FMAX=FMAX, FRMAX=FRMAX, P=P, U=U, M=M, PU=P * U,
+        window=window, mtu=int(MTU), brtt_inter=int(tm.brtt_inter),
+        bdp_bytes=bdp, trimming=cfg.trimming,
+        credit_based=cfg.algo in registry.CREDIT_BASED,
+        paced=cfg.algo in registry.PACED,
+        lb_mode=reps.LB_NAMES[cfg.lb],
+    )
+    consts = Consts(
+        src=jnp.asarray(wl.src, I32),
+        dst=jnp.asarray(wl.dst, I32),
+        size=jnp.asarray(wl.size, I32),
+        t_start=jnp.asarray(wl.t_start, I32),
+        ret=ret_f,
+        flows_of=jnp.asarray(flows_of),
+        flows_by_recv=jnp.asarray(flows_by_recv),
+        kind=jnp.asarray(topo.kind, I32),
+        e_aux=jnp.asarray(topo.aux, I32),
+        lat_q=jnp.asarray(lat_q),
+        service_period=jnp.asarray(service_period),
+        dead=jnp.asarray(dead),
+        fault_start=jnp.asarray(cfg.fault_start, I32),
+        trim_delay=jnp.asarray(tm.trim_delay, I32),
+        kmin=jnp.asarray(kmin, F32),
+        kspan=jnp.asarray(kmax - kmin, F32),
+        rto=rto_f,
+        credit_window=credit_window,
+        start_cwnd=jnp.asarray(cfg.start_cwnd_mult * bdp, F32),
+        cc=cc_params,
+        lb=lb_params,
+    )
+    return topo, tm, dims, consts
+
+
+def init_state(dims: Dims, consts: Consts) -> SimState:
+    """Tick-0 world.  Pure in (dims, consts); safe under jit and vmap."""
+    zeros = jnp.zeros
+    NF, N, NQ = dims.NF, dims.N, dims.NQ
+    cc = init_cc_state(NF, consts.cc, start_cwnd=consts.start_cwnd)
+    lb = reps.init_lb_state(NF, consts.lb)
+    return SimState(
+        now=zeros((), I32),
+        salt=zeros((), I32),
+        q_fields=zeros((NQ + 1, dims.CAP, 5), I32),
+        q_head=zeros((NQ + 1,), I32),
+        q_size=zeros((NQ + 1,), I32),
+        infl=zeros((dims.L + 1, dims.NE, 7), I32),
+        ack_ring=zeros((dims.R, N + 1, 6), I32),
+        trim_cnt=zeros((dims.R, NF + 1), I32),
+        trim_bytes=zeros((dims.R, NF + 1), F32),
+        lost_bits=zeros((dims.R, NF + 1, dims.WW), I32),
+        credit_ring=zeros((dims.R, NF + 1), F32),
+        st_state=zeros((NF + 1, dims.W), I32),
+        st_seq=zeros((NF + 1, dims.W), I32),
+        st_ts=zeros((NF + 1, dims.W), I32),
+        next_seq=zeros((NF,), I32),
+        unacked=zeros((NF,), F32),
+        done=zeros((NF,), bool),
+        fct=jnp.full((NF,), -1, I32),
+        goodput=zeros((NF,), I32),
+        bitmap=zeros((NF + 1, dims.MAXW), I32),
+        granted=zeros((NF,), F32),
+        trim_seen=zeros((NF,), F32),
+        rr_recv=zeros((N,), I32),
+        rr_send=zeros((N,), I32),
+        pace_accum=zeros((NF,), F32),
+        cc=cc, lb=lb, m=init_metrics(),
+    )

@@ -1,0 +1,153 @@
+"""Batched config-sweep runner: an N-point parameter grid for one compile.
+
+Every numeric knob of the simulator is *traced* (it lives in ``Consts``,
+not in the closed-over ``Dims``), so evaluating N parameter settings of the
+same (topology, workload, algorithm) does not need N compilations — it
+needs one ``vmap`` of the already-composed step over a batch of ``Consts``
+where only the swept leaves carry a leading [B] axis.
+
+Sweepable keys (any mix per point):
+  * CC algorithm constants — the ``make_cc_params`` tuning kwargs
+    (``fd``, ``md``, ``fi``, ``k_fast``, ``qa_scaling``, ``wtd_alpha``,
+    ``wtd_thresh``, ``fi_rtt_tol``, ``target_mult``, ``maxcwnd_mult``,
+    ``sw_ai``, ``sw_beta``, ``sw_max_mdf``)
+  * numeric ``SimConfig`` fields — ``start_cwnd_mult``, ``react_every``,
+    ``rto_mult``, ``credit_window_mult``, ``kmin_frac``, ``kmax_frac``,
+    ``num_entropies``, ``fault_start``
+
+Usage::
+
+    points = [{"start_cwnd_mult": a, "react_every": r}
+              for a in (0.5, 1.25) for r in (1, 2, 4, 8)]
+    sw = build_sweep(SimConfig(algo="smartt"), wl, points)
+    states = sw.run(max_ticks=30000)        # [B]-batched SimState
+    rows = sw.summaries(states)             # one summarize() dict per point
+
+The static shape of the run (tree, workload, algorithm, backend, lb,
+trimming) must agree across points; anything per-point that would change
+``Dims`` raises at build time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.netsim import engine, metrics, state
+
+# make_cc_params tuning kwargs routable through SimConfig.cc_overrides
+CC_PARAM_KEYS = frozenset({
+    "target_mult", "fd", "md", "fi", "k_fast", "qa_scaling", "wtd_alpha",
+    "wtd_thresh", "fi_rtt_tol", "maxcwnd_mult", "sw_ai", "sw_beta",
+    "sw_max_mdf",
+})
+# numeric SimConfig fields that stay inside Consts (no Dims impact)
+CFG_KEYS = frozenset({
+    "rto_mult", "react_every", "credit_window_mult", "start_cwnd_mult",
+    "kmin_frac", "kmax_frac", "num_entropies", "fault_start",
+})
+
+
+def apply_point(cfg: state.SimConfig, point: Mapping[str, float]) -> state.SimConfig:
+    """Fold one sweep point into a SimConfig (cc keys -> cc_overrides)."""
+    cfg_kw = {}
+    cc = dict(cfg.cc_overrides)
+    for k, v in point.items():
+        if k in CFG_KEYS:
+            cfg_kw[k] = v
+        elif k in CC_PARAM_KEYS:
+            cc[k] = v
+        else:
+            raise KeyError(
+                f"unsweepable key {k!r}; numeric keys are "
+                f"{sorted(CFG_KEYS | CC_PARAM_KEYS)}")
+    return dataclasses.replace(cfg, cc_overrides=tuple(sorted(cc.items())),
+                               **cfg_kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sweep:
+    """A compiled simulator plus a [B]-batched Consts bundle."""
+
+    sim: engine.Sim
+    points: tuple
+    consts_b: state.Consts       # swept leaves carry a leading [B] axis
+    axes: state.Consts           # matching vmap in_axes tree (0 / None)
+
+    @property
+    def n_points(self) -> int:
+        return len(self.points)
+
+    def init(self) -> state.SimState:
+        dims = self.sim.dims
+        return jax.vmap(lambda c: state.init_state(dims, c),
+                        in_axes=(self.axes,),
+                        axis_size=self.n_points)(self.consts_b)
+
+    def run(self, max_ticks: int) -> state.SimState:
+        """Run all points to completion; one step compilation total."""
+        return _run_sweep(self.sim.step_fn, self.axes, max_ticks,
+                          self.consts_b, self.init())
+
+    def summaries(self, states: state.SimState) -> list:
+        """Per-point summaries.  Per-flow results (fct/goodput/trims) are
+        exact; time-integral fields (``ticks``, ``q_mean``) reflect the
+        grid's *shared* run length — all points tick until the slowest
+        finishes — so compare those across points, not against standalone
+        runs."""
+        return summarize_batch(self.sim, states)
+
+
+def build_sweep(cfg: state.SimConfig, wl,
+                points: Sequence[Mapping[str, float]]) -> Sweep:
+    if not points:
+        raise ValueError("empty sweep")
+    sim = engine.build(cfg, wl)
+    # derive() is re-run per point: that repeats the O(NF) structural host
+    # loops, but keeps a single source of truth for Consts derivation.
+    # Host-side cost is negligible next to the device run; identical leaves
+    # are deduplicated below.
+    consts_list = [sim.consts if not pt else
+                   state.derive(apply_point(cfg, pt), wl)[3] for pt in points]
+
+    flats, treedef = zip(*[jax.tree_util.tree_flatten(c) for c in consts_list])
+    if any(td != treedef[0] for td in treedef[1:]):
+        raise ValueError("sweep points disagree on Consts structure")
+    leaves, axes_leaves = [], []
+    for slot in zip(*flats):
+        x0 = np.asarray(slot[0])
+        if all(np.array_equal(np.asarray(x), x0) for x in slot[1:]):
+            leaves.append(slot[0])
+            axes_leaves.append(None)
+        else:
+            leaves.append(jnp.stack([jnp.asarray(x) for x in slot]))
+            axes_leaves.append(0)
+    consts_b = jax.tree_util.tree_unflatten(treedef[0], leaves)
+    axes = jax.tree_util.tree_unflatten(treedef[0], axes_leaves)
+    return Sweep(sim=sim, points=tuple(dict(p) for p in points),
+                 consts_b=consts_b, axes=axes)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _run_sweep(step_fn, axes, max_ticks, consts_b, states):
+    vstep = jax.vmap(step_fn, in_axes=(axes, 0))
+
+    def cond(st):
+        return (st.now[0] < max_ticks) & ~jnp.all(st.done)
+
+    def body(st):
+        return vstep(consts_b, st)
+
+    return jax.lax.while_loop(cond, body, states)
+
+
+def summarize_batch(sim: engine.Sim, states: state.SimState) -> list:
+    """One host-side summarize() dict per sweep point."""
+    b_dim = np.asarray(states.done).shape[0]
+    return [metrics.summarize(sim, jax.tree.map(lambda x: x[b], states))
+            for b in range(b_dim)]

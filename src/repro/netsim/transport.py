@@ -1,0 +1,109 @@
+"""Phase 3 of the tick — control-plane events and transport bookkeeping.
+
+Drains this tick's slot of the delayed control rings (ACKs, trimmed-header
+notifications, loss bitmaps, EQDS credit grants), frees/loses sent-ring
+slots, fires retransmission timeouts, and hands the per-flow event bundle
+to the congestion-control update (any registry backend: pure-jnp or the
+Pallas ``cc_update`` kernel) and the load-balancer ACK path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import reps
+from repro.core.types import CCEvent
+from repro.netsim.metrics import HIST_BINS
+from repro.netsim.state import Consts, Dims, SimState, pkt_size
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def control(dims: Dims, consts: Consts, cc_update, st: SimState) -> SimState:
+    """Phase 3: ACK / trim / timeout / credit events -> transport state,
+    CC update (``cc_update`` resolved by the registry), LB update."""
+    t = st.now
+    m = st.m
+    NF, N, R, W = dims.NF, dims.N, dims.R, dims.W
+    MTU = float(dims.mtu)
+    flow_ids = jnp.arange(NF, dtype=I32)
+
+    acks = st.ack_ring[t % R][:N]                      # [N, 6] (drop sentinel)
+    ack_ring = st.ack_ring.at[t % R].set(0)
+    v = acks[:, 0] == 1
+    idxf = jnp.where(v, acks[:, 1], NF)
+
+    def scat(vals, fill=0):
+        return jnp.full((NF + 1,), fill, vals.dtype).at[idxf].set(vals)[:NF]
+
+    has_ack = jnp.zeros((NF + 1,), bool).at[idxf].set(v)[:NF]
+    ack_seq = scat(acks[:, 2])
+    ack_ecn = jnp.zeros((NF + 1,), bool).at[idxf].set(acks[:, 3] == 1)[:NF]
+    ack_ent = scat(acks[:, 4])
+    ack_ts = scat(acks[:, 5])
+    rtt = jnp.where(has_ack, (t - ack_ts).astype(F32), 0.0)
+    ack_bytes = jnp.where(
+        has_ack, pkt_size(dims, consts, flow_ids, ack_seq).astype(F32), 0.0)
+
+    trims = st.trim_cnt[t % R][:NF]
+    tbytes = st.trim_bytes[t % R][:NF]
+    lbits = st.lost_bits[t % R][:NF]
+    cred = st.credit_ring[t % R][:NF]
+    trim_cnt = st.trim_cnt.at[t % R].set(0)
+    trim_bytes = st.trim_bytes.at[t % R].set(0.0)
+    lost_bits = st.lost_bits.at[t % R].set(0)
+    credit_ring = st.credit_ring.at[t % R].set(0.0)
+
+    # transport: free the ACKed slot
+    aslot2 = ack_seq % W
+    cur = st.st_state[flow_ids, aslot2]
+    cur_seq = st.st_seq[flow_ids, aslot2]
+    match = has_ack & (cur != 0) & (cur_seq == ack_seq)
+    st_state = st.st_state.at[flow_ids, aslot2].set(jnp.where(match, 0, cur))
+
+    # trimmed packets -> lost (awaiting retransmission)
+    wbits = jnp.arange(W, dtype=I32)
+    bitsel = (lbits[:, wbits // 32] >> (wbits % 32)) & 1      # [NF, W]
+    lost_mask = (bitsel == 1) & (st_state[:NF] == 1)
+    st_state = st_state.at[:NF].set(jnp.where(lost_mask, 3, st_state[:NF]))
+
+    # timeouts
+    started_flows = (t >= consts.t_start) & ~st.done
+    to_mask = (st_state[:NF] == 1) & \
+        ((t - st.st_ts[:NF]).astype(F32) > consts.rto[:, None]) & \
+        started_flows[:, None]
+    # count a spurious retx when the receiver already has the packet
+    sp_word = st.st_seq[:NF] // 32
+    sp_bit = st.st_seq[:NF] % 32
+    already = ((st.bitmap[:NF][jnp.arange(NF)[:, None], sp_word] >> sp_bit) & 1) == 1
+    m = m._replace(spurious_retx=m.spurious_retx
+                   + jnp.sum((to_mask & already).astype(I32)))
+    st_state = st_state.at[:NF].set(jnp.where(to_mask, 3, st_state[:NF]))
+    n_to = jnp.sum(to_mask.astype(I32), axis=1)
+    to_bytes = n_to.astype(F32) * MTU
+    m = m._replace(n_to=m.n_to + jnp.sum(n_to))
+
+    unacked = jnp.sum((st_state[:NF] == 1).astype(I32), axis=1).astype(F32) * MTU
+
+    ev = CCEvent(
+        has_ack=has_ack, ack_bytes=ack_bytes, ecn=ack_ecn, rtt=rtt,
+        ack_entropy=ack_ent, n_trims=trims, trim_bytes=tbytes,
+        n_timeouts=n_to, to_bytes=to_bytes, unacked=unacked,
+        credit_grant=cred,
+    )
+    cc = cc_update(consts.cc, st.cc, ev, t)
+    lb = reps.on_ack(dims.lb_mode, consts.lb, st.lb, has_ack, ack_ecn, ack_ent,
+                     flow_ids, t)
+    # RTT histogram
+    bins = jnp.clip((rtt * (8.0 / dims.brtt_inter)).astype(I32), 0, HIST_BINS - 1)
+    m = m._replace(
+        rtt_hist=m.rtt_hist.at[jnp.where(has_ack, bins, 0)].add(has_ack.astype(I32)),
+        n_ack=m.n_ack + jnp.sum(has_ack.astype(I32)),
+    )
+
+    return st._replace(
+        ack_ring=ack_ring, trim_cnt=trim_cnt, trim_bytes=trim_bytes,
+        lost_bits=lost_bits, credit_ring=credit_ring, st_state=st_state,
+        unacked=unacked, cc=cc, lb=lb, m=m,
+    )

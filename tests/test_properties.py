@@ -3,7 +3,10 @@ netsim conservation laws."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import registry
 from repro.core.smartt import smartt_update
