@@ -8,6 +8,9 @@ Every row prints ``name,us_per_call,derived`` CSV.
 
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 
 import numpy as np
@@ -16,6 +19,9 @@ from repro.netsim.engine import SimConfig, build, jain_fairness, summarize
 from repro.netsim.units import FatTreeConfig, LinkConfig
 
 LINK = LinkConfig()
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_netsim.json")
 
 # standard scaled topologies
 TREE_8TO1 = FatTreeConfig(racks=8, nodes_per_rack=16, uplinks=2)     # 128 nodes
@@ -45,6 +51,46 @@ def emit(name: str, wall_s: float, derived) -> str:
     row = f"{name},{wall_s*1e6:.0f},{derived}"
     print(row)
     return row
+
+
+def write_bench_json(section: str, rows, path: str | None = None,
+                     meta: dict | None = None) -> str:
+    """Merge ``rows`` (a list of dicts keyed by ``name``) into the
+    machine-readable benchmark ledger ``BENCH_netsim.json`` under
+    ``sections[section]``.  Other sections are preserved, and within the
+    section new rows replace same-named rows while the rest survive — so
+    the trajectory accumulates PR-over-PR and a filtered run (e.g.
+    ``benchmarks.run --json fig2``) never drops previously recorded
+    figures."""
+    path = path or BENCH_JSON
+    doc = {"schema": 1, "sections": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            if isinstance(old, dict) and old.get("schema") == 1 \
+                    and isinstance(old.get("sections"), dict):
+                doc = old
+        except (json.JSONDecodeError, OSError):
+            pass                      # unreadable ledger: start fresh
+    rows = list(rows)
+    prev = doc["sections"].get(section, {})
+    if isinstance(prev, dict) and isinstance(prev.get("rows"), list):
+        fresh = {r.get("name") for r in rows if isinstance(r, dict)}
+        rows = [r for r in prev["rows"]
+                if isinstance(r, dict) and r.get("name") not in fresh] + rows
+    sec = {
+        "generated_unix": int(time.time()),
+        "platform": platform.platform(),
+        "rows": rows,
+    }
+    if meta:
+        sec.update(meta)
+    doc["sections"][section] = sec
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def ideal_ticks(n_pkts_through_bottleneck: int, brtt: int = 26) -> int:

@@ -1,0 +1,166 @@
+"""Superstep execution-engine throughput benchmark (ticks/second).
+
+Measures the aggregate run loop on the standard scenarios (incast,
+permutation, windowed alltoall) across CC backends and superstep sizes,
+against an *ungated* K=1 while-loop reference — the pre-superstep engine
+loop whose all-done exit reduction runs every tick.  Variants are measured
+interleaved (round-robin over reps, best-of) so machine-load drift does
+not bias one variant.
+
+Prints the usual ``name,us_per_call,derived`` CSV rows and always records
+a machine-readable ``perf`` section into ``BENCH_netsim.json`` (see
+``benchmarks.common.write_bench_json``) so ticks/sec is tracked
+PR-over-PR.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf [--quick] [--json-path PATH]
+      [--reps N] [--backends jnp,pallas]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (BENCH_JSON, LINK, TREE_4TO1, TREE_FLAT, emit,
+                               write_bench_json)
+from repro.netsim import workloads
+from repro.netsim.engine import SimConfig, build
+from repro.netsim.units import FatTreeConfig
+
+KiB = 1024
+MiB = 1024 * 1024
+
+TREE_TINY = FatTreeConfig(racks=2, nodes_per_rack=2, uplinks=2)   # 4 nodes
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _run_k1_ungated(step, state0, max_ticks):
+    """Reference loop: the pre-superstep engine hot loop (one tick per
+    while_loop iteration, exit reduction evaluated every tick)."""
+    def cond(st):
+        return (st.now < max_ticks) & ~jnp.all(st.done)
+
+    return jax.lax.while_loop(cond, step, state0)
+
+
+def _legacy_baseline(cfg, wl, max_ticks):
+    """The full pre-PR engine: legacy tick op structure (benchmarks.legacy)
+    under the ungated K=1 while loop."""
+    from benchmarks.legacy import build_legacy
+    sim = build_legacy(cfg, wl)
+    return lambda: _run_k1_ungated(sim.step, sim.init(), max_ticks)
+
+
+def scenarios(quick: bool):
+    """(name, tree, workload, max_ticks, backends) per standard scenario.
+
+    The pallas backend runs the cc_update kernel in interpret mode on CPU
+    (orders of magnitude slower per tick), so it only gets the smallest
+    scenario of each mode; compiled-TPU runs lift that restriction.
+    """
+    if quick:
+        tiny_in = workloads.incast(TREE_TINY, degree=3, size_bytes=16 * KiB,
+                                   seed=0)
+        tiny_pm = workloads.permutation(TREE_TINY, size_bytes=32 * KiB, seed=1)
+        return [
+            ("tiny_incast3", TREE_TINY, tiny_in, 20000, ("jnp", "pallas")),
+            ("tiny_perm4", TREE_TINY, tiny_pm, 20000, ("jnp",)),
+        ]
+    return [
+        ("incast8_32n", TREE_FLAT,
+         workloads.incast(TREE_FLAT, degree=8, size_bytes=512 * KiB, seed=0),
+         60000, ("jnp", "pallas")),
+        ("perm64", TREE_4TO1,
+         workloads.permutation(TREE_4TO1, size_bytes=2 * MiB, seed=7),
+         60000, ("jnp",)),
+        ("alltoall16_w4", TREE_4TO1,
+         workloads.alltoall(TREE_4TO1, size_bytes=64 * KiB, window=4,
+                            nodes=16),
+         200000, ("jnp",)),
+    ]
+
+
+def superstep_sizes(brtt: int, quick: bool):
+    ks = [1, brtt] if quick else [1, 8, brtt, 2 * brtt]
+    return sorted(set(ks))
+
+
+def bench_scenario(name, tree, wl, max_ticks, backend, reps, quick):
+    """Measure the ungated reference and every superstep size, interleaved.
+    Returns one row dict per variant."""
+    cfg0 = SimConfig(link=LINK, tree=tree, algo="smartt", cc_backend=backend)
+    base_sim = build(cfg0, wl)
+    # baseline: the pre-PR engine — legacy tick op structure under the
+    # ungated one-tick-per-iteration while loop (see benchmarks/legacy.py)
+    variants = {"k1_ungated": _legacy_baseline(cfg0, wl, max_ticks)}
+    ksizes = superstep_sizes(base_sim.dims.brtt_inter, quick)
+    for k in ksizes:
+        sim = build(SimConfig(link=LINK, tree=tree, algo="smartt",
+                              cc_backend=backend, superstep=k), wl)
+        variants[f"k{k}"] = (lambda s=sim: s.run(max_ticks))
+
+    walls, ticks = {}, {}
+    for label, fn in variants.items():       # warmup: compile + first run
+        st = fn()
+        st.now.block_until_ready()
+        ticks[label] = int(st.now)
+        walls[label] = float("inf")
+    for _ in range(reps):                    # interleaved best-of
+        for label, fn in variants.items():
+            t0 = time.time()
+            fn().now.block_until_ready()
+            walls[label] = min(walls[label], time.time() - t0)
+
+    base_tps = ticks["k1_ungated"] / walls["k1_ungated"]
+    rows = []
+    for label in variants:
+        tps = ticks[label] / walls[label]
+        speedup = tps / base_tps
+        k = 0 if label == "k1_ungated" else int(label[1:])
+        emit(f"perf_{name}_{backend}_{label}", walls[label],
+             f"ticks={ticks[label]};ticks_per_sec={tps:.0f};"
+             f"speedup_vs_k1_ungated={speedup:.2f}")
+        rows.append(dict(
+            name=f"{name}/{backend}/{label}", scenario=name, backend=backend,
+            superstep=k, ticks=ticks[label], wall_s=round(walls[label], 6),
+            ticks_per_sec=round(tps, 1),
+            speedup_vs_k1_ungated=round(speedup, 3)))
+    return rows
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true",
+                   help="tiny topology smoke run (CI)")
+    p.add_argument("--json-path", default=BENCH_JSON, metavar="PATH",
+                   help="BENCH_netsim.json path (always written)")
+    p.add_argument("--reps", type=int, default=None,
+                   help="timing repetitions per variant (best-of)")
+    p.add_argument("--backends", default=None,
+                   help="comma-separated override, e.g. 'jnp'")
+    args = p.parse_args(argv)
+    reps = args.reps or (2 if args.quick else 4)
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    rows = []
+    for name, tree, wl, max_ticks, backends in scenarios(args.quick):
+        if args.backends:
+            backends = [b for b in args.backends.split(",") if b]
+        for backend in backends:
+            rows.extend(bench_scenario(name, tree, wl, max_ticks, backend,
+                                       reps, args.quick))
+    path = write_bench_json(
+        "perf", rows, path=args.json_path,
+        meta=dict(quick=bool(args.quick), reps=reps, jax=jax.__version__,
+                  device=str(jax.devices()[0].platform)))
+    print(f"\n# total wall: {time.time()-t0:.1f}s; {len(rows)} rows -> {path}")
+
+
+if __name__ == "__main__":
+    main()

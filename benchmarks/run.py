@@ -2,37 +2,67 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  The netsim figures always
 run; the roofline table is appended when the dry-run sweeps' JSON outputs
-exist (see repro.launch.dryrun).
+exist (see repro.launch.dryrun).  With ``--json`` the rows are also
+recorded into the machine-readable ``BENCH_netsim.json`` ledger (section
+``figs``) via ``benchmarks.common.write_bench_json``.
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.run [fig2 fig6 ...]
+  PYTHONPATH=src python -m benchmarks.run [--json] [--json-path PATH]
+      [fig2 fig6 ...]
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
+import traceback
 
 
-def main() -> None:
+def _row_dicts(rows, errors):
+    out = []
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        out.append(dict(name=name, us_per_call=float(us), derived=derived))
+    out.extend(dict(name=name, error=err) for name, err in errors)
+    return out
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("figs", nargs="*", help="substring filters (fig2 fig6 ...)")
+    p.add_argument("--json", action="store_true",
+                   help="also record rows into BENCH_netsim.json")
+    p.add_argument("--json-path", default=None, metavar="PATH",
+                   help="ledger path (implies --json)")
+    args = p.parse_args(argv)
+
     t0 = time.time()
     from benchmarks import fig_benchmarks as F
 
-    wanted = set(sys.argv[1:])
+    wanted = set(args.figs)
 
     def selected(fn):
         return not wanted or any(w in fn.__name__ for w in wanted)
 
     print("name,us_per_call,derived")
-    rows = []
+    rows, errors = [], []
     for fn in F.ALL_FIGS:
         if not selected(fn):
             continue
         try:
             rows.extend(fn())
         except Exception as e:  # noqa: BLE001
+            # keep the CSV row shape but never swallow the diagnosis
+            traceback.print_exc(file=sys.stderr)
+            errors.append((fn.__name__, f"{type(e).__name__}:{e}"))
             print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}")
+
+    if args.json or args.json_path:
+        from benchmarks.common import write_bench_json
+        write_bench_json("figs", _row_dicts(rows, errors),
+                         path=args.json_path)
 
     # roofline table if the sweep artifacts exist
     here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

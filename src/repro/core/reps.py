@@ -58,18 +58,21 @@ def make_lb_params(num_entropies: int = 256, bdp_pkts: int = 32,
 def init_lb_state(n_flows: int, params: LBParams, seed: int = 0) -> LBState:
     flow_ids = jnp.arange(n_flows, dtype=jnp.int32)
     rand = (hashing.hash2(flow_ids, jnp.int32(seed)) % params.num_entropies.astype(jnp.uint32)).astype(jnp.int32)
-    z32 = jnp.zeros((n_flows,), jnp.int32)
-    zf = jnp.zeros((n_flows,), jnp.float32)
+    # Every field gets its own buffer: the engine's run loops donate the
+    # whole SimState to XLA, and donating one buffer through two pytree
+    # leaves is a runtime error.
+    z32 = lambda: jnp.zeros((n_flows,), jnp.int32)
+    zf = lambda: jnp.zeros((n_flows,), jnp.float32)
     return LBState(
         next_entropy=rand,           # start exploration at a random offset
-        cached_entropy=rand,
-        explore_sent=z32,
-        spray_ctr=z32,
-        plb_entropy=rand,
-        plb_marked=zf,
-        plb_total=zf,
-        plb_congested=z32,
-        plb_round_end=zf,
+        cached_entropy=jnp.copy(rand),
+        explore_sent=z32(),
+        spray_ctr=z32(),
+        plb_entropy=jnp.copy(rand),
+        plb_marked=zf(),
+        plb_total=zf(),
+        plb_congested=z32(),
+        plb_round_end=zf(),
     )
 
 

@@ -3,8 +3,18 @@
 Execution model (DESIGN.md Sec. 6): one tick = one MTU serialization time;
 every output port forwards at most one data packet per tick.  All state is
 struct-of-arrays with static shapes; one tick is a pure function
-``step: SimState -> SimState`` executed under ``lax.while_loop`` (aggregate
-runs, early exit) or ``lax.scan`` (trace runs, per-tick outputs).
+``step: SimState -> SimState`` executed in superstep-fused run loops
+(aggregate runs, early exit) or under ``lax.scan`` (trace runs, per-tick
+outputs).
+
+The aggregate run loops execute in *supersteps* (DESIGN.md Sec. 6): a
+``lax.fori_loop`` fuses ``Dims.superstep`` ticks per ``while_loop``
+iteration, amortizing the while-loop round-trip (cond dispatch + carry
+handling) over K ticks; each fused tick is individually gated on the same
+exit condition (``lax.cond``), keeping every trajectory bit-for-bit
+identical to the K=1 loop.  All run-loop entry points donate the incoming
+``SimState`` buffers to XLA (callers must treat a state passed to a run
+loop as consumed).
 
 The six sub-steps of a tick live in dedicated phase modules, each a pure
 function ``(Dims, Consts, SimState) -> SimState``:
@@ -66,7 +76,8 @@ class Sim:
     init: callable          # () -> SimState
 
     def run(self, max_ticks: int) -> SimState:
-        return _run_until_done(self.step, self.init(), max_ticks)
+        return _run_until_done(self.step, self.init(), max_ticks,
+                               self.dims.superstep)
 
     def run_trace(self, ticks: int, trace_flows: int = 8):
         return _run_trace(self.step, self.init(), ticks, trace_flows)
@@ -78,7 +89,7 @@ class Sim:
         import numpy as _np
         states = jax.vmap(lambda s: self.init()._replace(
             salt=s.astype(I32)))(jnp.asarray(_np.asarray(seeds), I32))
-        return _run_batch(self.step, states, max_ticks)
+        return _run_batch(self.step, states, max_ticks, self.dims.superstep)
 
 
 # --------------------------------------------------------------------------
@@ -112,30 +123,66 @@ def build(cfg: SimConfig, wl: Workload) -> Sim:
 
 
 # --------------------------------------------------------------------------
-# run loops
+# run loops (superstep execution; donated state buffers)
 # --------------------------------------------------------------------------
+#
+# The outer while loop advances one *superstep* (K fused ticks) per
+# iteration, amortizing the loop round-trip over K ticks.  Each fused tick
+# is gated on the *same* exit predicate via ``lax.cond`` (so the cheap
+# reduction still runs per tick, but as part of the fused body) — the
+# predicate is scalar (reduced over flows, and over the batch for the
+# batched loops) so the cond stays a real branch, and once the run
+# finishes or hits max_ticks the remaining ticks of the superstep are
+# identity — which makes every K > 1 trajectory bit-for-bit identical to
+# K = 1, including ``now`` and all metrics counters (asserted in
+# tests/test_engine_superstep.py).
+#
+# ``donate_argnums`` hands the incoming state's buffers to XLA for in-place
+# reuse as the loop carry.  Contract: a ``SimState`` passed to a run loop
+# is consumed — callers must not read it afterwards (all entry points here
+# build a fresh ``init()`` per call).
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_until_done(step, state0: SimState, max_ticks: int) -> SimState:
+def _superstep_loop(step, cond, K):
+    """while(cond) { K x (cond ? step : id) } — cond reduced once per K.
+
+    Every K (including 1) uses the same gated fori-in-while structure, so
+    the tick graph is embedded — and therefore lowered by XLA — identically
+    for every superstep size; only the trip count changes.  (Embedding the
+    K=1 tick bare in the while body changes XLA's fusion/FMA-contraction
+    decisions and perturbs f32 CC arithmetic by an ULP, which would break
+    the bit-for-bit equivalence contract across K.)"""
+    def tick(_, st):
+        return jax.lax.cond(cond(st), step, lambda s: s, st)
+
+    def body(st):
+        return jax.lax.fori_loop(0, max(K, 1), tick, st)
+
+    return lambda st: jax.lax.while_loop(cond, body, st)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))
+def _run_until_done(step, state0: SimState, max_ticks: int,
+                    superstep: int) -> SimState:
     def cond(st):
         return (st.now < max_ticks) & ~jnp.all(st.done)
 
-    return jax.lax.while_loop(cond, step, state0)
+    return _superstep_loop(step, cond, superstep)(state0)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_batch(step, states: SimState, max_ticks: int) -> SimState:
+@functools.partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))
+def _run_batch(step, states: SimState, max_ticks: int,
+               superstep: int) -> SimState:
     """Run a [B]-batched state bundle to completion (vmapped step)."""
     vstep = jax.vmap(step)
 
     def cond(st):
         return (st.now[0] < max_ticks) & ~jnp.all(st.done)
 
-    return jax.lax.while_loop(cond, vstep, states)
+    return _superstep_loop(vstep, cond, superstep)(states)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+@functools.partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))
 def _run_trace(step, state0: SimState, ticks: int, trace_flows: int):
     tf = trace_flows
 

@@ -24,12 +24,13 @@ I32 = jnp.int32
 F32 = jnp.float32
 
 
-def route_from_queue(dims: Dims, consts: Consts, qidx, flow):
-    """Next queue for a packet departing fabric port ``qidx`` (negative ids
-    encode delivery to node -(id+1))."""
+def route_from_queue(dims: Dims, consts: Consts, flow):
+    """Next queue for the packet departing each fabric port (``flow`` is
+    [NQ], one head-of-line flow per port; negative ids encode delivery to
+    node -(id+1)).  Port kind/aux come from the hoisted ``Consts`` slices."""
     d = consts.dst[jnp.clip(flow, 0, dims.NF - 1)]
     drack = d // dims.M
-    k, ax = consts.kind[qidx], consts.e_aux[qidx]
+    k, ax = consts.kind_q, consts.aux_q
     r_up = dims.PU + ax * dims.P + drack    # t0_up -> t1_down[spine, drack]
     r_t1 = 2 * dims.PU + d                  # t1_down -> t0_down[dst]
     r_del = -(d + 1)                        # t0_down -> deliver
@@ -53,8 +54,9 @@ def departures(dims: Dims, consts: Consts, st: SimState) -> SimState:
     t = st.now
     m = st.m
     NQ, CAP, L = dims.NQ, dims.CAP, dims.L
+    B = 2 * dims.PU                                   # core/edge port split
 
-    qidx = jnp.arange(NQ, dtype=I32)
+    qidx = consts.qidx
     in_fault = t >= consts.fault_start
     svc = jnp.where(in_fault & (consts.service_period > 1),
                     (t % jnp.maximum(consts.service_period, 1)) == 0, True)
@@ -70,13 +72,21 @@ def departures(dims: Dims, consts: Consts, st: SimState) -> SimState:
     d_ecn = d_ecn | (mark & active).astype(I32)
     black = consts.dead[qidx] & active & in_fault
     emit = active & ~black
-    next_q = route_from_queue(dims, consts, qidx, d_flow)
+    next_q = route_from_queue(dims, consts, d_flow)
     q_head = st.q_head.at[:NQ].set(jnp.where(active, (head + 1) % CAP, head))
     q_size = st.q_size.at[:NQ].add(-active.astype(I32))
-    slot = jnp.where(emit, (t + consts.lat_q[:NQ]) % L, L)
-    payload = jnp.stack(
-        [emit.astype(I32), next_q, d_flow, d_seq, d_ent, d_ecn, d_ts], axis=1)
-    infl = st.infl.at[slot, qidx].set(payload)
+    payload = jnp.where(emit[:, None], jnp.stack(
+        [emit.astype(I32), next_q, d_flow, d_seq, d_ent, d_ecn, d_ts],
+        axis=1), 0)
+    # Wire placement as two dynamic-update-slices, not a scatter: latency
+    # is uniform within the core ports ([0, 2PU): t0_up + t1_down) and the
+    # edge ports ([2PU, NQ): t0_down), and each emitter's target slot
+    # (t + lat) % L holds nothing still live at tick t (only this emitter
+    # writes its column, and whatever it wrote there last wrap landed
+    # L - lat ticks ago) — so blanket-writing zeros for inactive ports is
+    # exact, and arrivals never needs to zero a drained slot.
+    infl = st.infl.at[(t + consts.lat_core) % L, :B].set(payload[:B])
+    infl = infl.at[(t + consts.lat_edge) % L, B:NQ].set(payload[B:])
     m = m._replace(n_black=m.n_black + jnp.sum(black.astype(I32)))
     return st._replace(q_head=q_head, q_size=q_size, infl=infl, m=m)
 
@@ -90,80 +100,105 @@ def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
     CAP, L, R = dims.CAP, dims.L, dims.R
 
     arr = st.infl[t % L]                               # [NE, 7]
-    infl = st.infl.at[t % L].set(0)
+    # no post-read zeroing needed: every emitter class blanket-rewrites its
+    # full row range of this slot (departures x2, sends) before the slot
+    # comes around again
+    infl = st.infl
     a_valid = arr[:, 0] == 1
     a_dstq, a_flow, a_seq, a_ent, a_ecn, a_ts = (arr[:, i] for i in range(1, 7))
-    deliver = a_valid & (a_dstq < 0)
     enq = a_valid & (a_dstq >= 0)
 
     # ---- deliveries ----
-    node = jnp.where(deliver, -a_dstq - 1, 0)
-    dflow = jnp.where(deliver, a_flow, NF)
-    word, bit = a_seq // 32, a_seq % 32
+    # Only the t0_down ports (emitter rows [2PU, 2PU+N), one per node, in
+    # node order) can deliver, so the delivery path works on that N-row
+    # slice: row i delivers to node i.
+    lo = 2 * dims.PU
+    darr = arr[lo:lo + N]
+    deliver = (darr[:, 0] == 1) & (darr[:, 1] < 0)
+    d_flow, d_seq, d_ent, d_ecn, d_ts = (darr[:, i] for i in range(2, 7))
+    dflow = jnp.where(deliver, d_flow, NF)
+    word, bit = d_seq // 32, d_seq % 32
     old = st.bitmap[dflow, word]
     isnew = deliver & (((old >> bit) & 1) == 0)
     bitmap = st.bitmap.at[dflow, word].add(
-        jnp.where(isnew, (1 << bit).astype(I32), 0))
-    psz = pkt_size(dims, consts, a_flow, a_seq)
-    goodput = st.goodput.at[jnp.where(isnew, a_flow, 0)].add(
-        jnp.where(isnew, psz, 0))
+        jnp.where(isnew, (1 << bit).astype(I32), 0), mode="promise_in_bounds")
+    psz = pkt_size(dims, consts, d_flow, d_seq)
+    goodput = st.goodput.at[jnp.where(isnew, d_flow, 0)].add(
+        jnp.where(isnew, psz, 0), mode="promise_in_bounds")
     newly_done = (goodput >= consts.size) & ~st.done
     done = st.done | newly_done
     fct = jnp.where(newly_done, t + consts.ret - consts.t_start, st.fct)
     # ACK generation (echoes entropy + ECN + timestamp; priority path).
-    # Non-delivering emitters write into the pre-sized sentinel column N.
-    anode = jnp.where(deliver, node, N)
-    aslot = (t + consts.ret[jnp.clip(a_flow, 0, NF - 1)]) % R
-    aslot = jnp.where(deliver, aslot, 0)
-    ack_payload = jnp.stack(
-        [deliver.astype(I32), a_flow, a_seq, a_ecn, a_ent, a_ts], axis=1)
-    ack_ring = st.ack_ring.at[aslot, anode].set(ack_payload)
+    # The return delay is constant (state.derive), so slot (t+ret) % R is
+    # exclusively this tick's: write all N receiver rows in one
+    # dynamic-update-slice, zeros where nothing was delivered.
+    ack_payload = jnp.where(deliver[:, None], jnp.stack(
+        [deliver.astype(I32), d_flow, d_seq, d_ecn, d_ent, d_ts], axis=1), 0)
+    ack_ring = st.ack_ring.at[(t + consts.ret) % R].set(ack_payload)
     m = m._replace(
         delivered_pkts=m.delivered_pkts + jnp.sum(deliver.astype(I32)),
         delivered_bytes=m.delivered_bytes + jnp.sum(jnp.where(isnew, psz, 0)).astype(F32),
     )
 
-    # ---- enqueues (sorted scatter with capacity + trim) ----
+    # ---- enqueues (sort-free scatter with capacity + trim) ----
+    # Same-queue arrivals must land in fixed emitter order (the semantics
+    # the old stable-argsort ranking gave).  The rank of emitter e within
+    # its destination-queue group is the count of emitters e' < e with the
+    # same destination — one [NE, NE] comparison + row-reduction, no sort,
+    # no searchsorted, and bit-for-bit the stable-argsort ranks.  (The
+    # quadratic form beats both the argsort and a one-hot [NE, NQ] prefix
+    # sum on CPU at fabric scale: it fuses to one elementwise+reduce pass,
+    # while cumsum lowers to a far slower reduce-window.)
     q_head, q_size = st.q_head, st.q_size
     edst = jnp.where(enq, a_dstq, NQ)
-    order = jnp.argsort(edst)
-    ds = edst[order]
-    eflow, eseq, eent, eecn, ets = (x[order] for x in (a_flow, a_seq, a_ent, a_ecn, a_ts))
-    first = jnp.searchsorted(ds, ds, side="left")
-    rank = jnp.arange(NE, dtype=first.dtype) - first
-    space = CAP - q_size[ds]
-    acc = (ds < NQ) & (rank < space)
-    pos = (q_head[ds] + q_size[ds] + rank.astype(I32)) % CAP
-    row = jnp.where(acc, ds, NQ)
+    before = (edst[None, :] == edst[:, None]) & \
+        (consts.eidx[None, :] < consts.eidx[:, None])
+    rank = jnp.sum(before.astype(I32), axis=1)
+    space = CAP - q_size[edst]
+    acc = (edst < NQ) & (rank < space)
+    pos = (q_head[edst] + q_size[edst] + rank) % CAP
+    row = jnp.where(acc, edst, NQ)
     posw = jnp.where(acc, pos, 0)
+    # (indices are NOT unique: every non-accepted emitter collapses onto
+    # the write-off cell (NQ, 0), which is never read)
     q_fields = st.q_fields.at[row, posw].set(
-        jnp.stack([eflow, eseq, eent, eecn, ets], axis=1))
-    q_size = q_size + jax.ops.segment_sum(acc.astype(I32), ds, num_segments=NQ + 1)
-    rej = (ds < NQ) & ~acc
+        jnp.stack([a_flow, a_seq, a_ent, a_ecn, a_ts], axis=1),
+        mode="promise_in_bounds")
+    q_size = q_size + jax.ops.segment_sum(acc.astype(I32), edst,
+                                          num_segments=NQ + 1)
+    rej = (edst < NQ) & ~acc
     # trim (paper: only when the buffer is full) or drop
-    rflow = jnp.where(rej, eflow, NF)
-    # receiver-side trim visibility (EQDS: trimmed headers reach the
-    # receiver, which re-schedules the pull — paper Sec. 2.2)
-    trim_seen = jnp.pad(st.trim_seen, (0, 1)).at[rflow].add(
-        jnp.where(rej, pkt_size(dims, consts, eflow, eseq).astype(F32), 0.0))[:NF]
+    rflow = jnp.where(rej, a_flow, NF)
+    rej_pkt = pkt_size(dims, consts, a_flow, a_seq)
+    rej_bytes_i = jnp.where(rej, rej_pkt, 0)
+    trim_seen = st.trim_seen
+    if dims.credit_based:
+        # receiver-side trim visibility (EQDS: trimmed headers reach the
+        # receiver, which re-schedules the pull — paper Sec. 2.2); only
+        # the credit grants read it, so sender-based algorithms skip it.
+        trim_seen = st.trim_seen.at[rflow].add(
+            rej_bytes_i.astype(F32), mode="promise_in_bounds")
     if dims.trimming:
-        W = dims.W
+        W, WW = dims.W, dims.WW
         tslot = jnp.where(rej, (t + consts.trim_delay) % R, 0)
-        trim_cnt = st.trim_cnt.at[tslot, rflow].add(rej.astype(I32))
-        trim_bytes = st.trim_bytes.at[tslot, rflow].add(
-            jnp.where(rej, pkt_size(dims, consts, eflow, eseq).astype(F32), 0.0))
-        wslot = (eseq % W) // 32
-        wbit = (eseq % W) % 32
-        lost_bits = st.lost_bits.at[tslot, rflow, wslot].add(
-            jnp.where(rej, (1 << wbit).astype(I32), 0))
+        # one packed scatter feeds the whole delayed trim ledger: count,
+        # bytes (exact in i32), and the WW per-slot loss-bitmap words
+        wslot = (a_seq % W) // 32
+        wbit = (a_seq % W) % 32
+        words = jnp.where(
+            rej[:, None] & (wslot[:, None] == jnp.arange(WW, dtype=I32)),
+            (1 << wbit)[:, None].astype(I32), 0)
+        upd = jnp.concatenate(
+            [rej.astype(I32)[:, None], rej_bytes_i[:, None], words], axis=1)
+        trim_ring = st.trim_ring.at[tslot, rflow].add(
+            upd, mode="promise_in_bounds")
         m = m._replace(n_trim=m.n_trim + jnp.sum(rej.astype(I32)))
     else:
-        trim_cnt, trim_bytes, lost_bits = st.trim_cnt, st.trim_bytes, st.lost_bits
+        trim_ring = st.trim_ring
         m = m._replace(n_drop=m.n_drop + jnp.sum(rej.astype(I32)))
 
     return st._replace(
         infl=infl, bitmap=bitmap, goodput=goodput, done=done, fct=fct,
         ack_ring=ack_ring, q_fields=q_fields, q_size=q_size,
-        trim_seen=trim_seen, trim_cnt=trim_cnt, trim_bytes=trim_bytes,
-        lost_bits=lost_bits, m=m,
+        trim_seen=trim_seen, trim_ring=trim_ring, m=m,
     )

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import reps
 from repro.netsim.fabric import route_from_sender
-from repro.netsim.state import Consts, Dims, SimState, pkt_size
+from repro.netsim.state import Consts, Dims, SimState
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -36,18 +36,20 @@ def grants(dims: Dims, consts: Consts, st: SimState) -> SimState:
     # sees trimmed headers) so retransmissions never starve.
     started_flows = (t >= consts.t_start) & ~st.done
     demand = started_flows & (
-        st.granted - st.goodput.astype(F32) - st.trim_seen < consts.credit_window)
+        st.granted - st.goodput.astype(F32) - st.trim_seen[:NF]
+        < consts.credit_window)
     dm = jnp.pad(demand, (0, 1))[consts.flows_by_recv]          # [N, FR]
     keys = (jnp.arange(FRMAX, dtype=I32)[None, :] - st.rr_recv[:, None]) % FRMAX
     keys = jnp.where(dm, keys, FRMAX + 1)
     sel = jnp.argmin(keys, axis=1)
     has_g = jnp.any(dm, axis=1)
-    gflow = jnp.where(has_g, consts.flows_by_recv[jnp.arange(N), sel], NF)
-    gslot = jnp.where(has_g, (t + consts.ret[jnp.clip(gflow, 0, NF - 1)]) % R, 0)
-    credit_ring = st.credit_ring.at[gslot, gflow].add(
-        jnp.where(has_g, MTU, 0.0))
+    gflow = jnp.where(has_g, consts.flows_by_recv[consts.node_ids, sel], NF)
+    # the grant return delay is the constant `ret` (state.derive), so all
+    # grants of this tick land in one ring slot
+    credit_ring = st.credit_ring.at[(t + consts.ret) % R, gflow].add(
+        jnp.where(has_g, MTU, 0.0), mode="promise_in_bounds")
     granted = jnp.pad(st.granted, (0, 1)).at[gflow].add(
-        jnp.where(has_g, MTU, 0.0))[:NF]
+        jnp.where(has_g, MTU, 0.0), mode="promise_in_bounds")[:NF]
     rr_recv = jnp.where(has_g, (sel.astype(I32) + 1) % FRMAX, st.rr_recv)
     return st._replace(credit_ring=credit_ring, granted=granted, rr_recv=rr_recv)
 
@@ -59,30 +61,36 @@ def sends(dims: Dims, consts: Consts, st: SimState) -> SimState:
     NF, N, NQ, L, W = dims.NF, dims.N, dims.NQ, dims.L, dims.W
     FMAX, window = dims.FMAX, dims.window
     mtu_i = dims.mtu
-    flow_ids = jnp.arange(NF, dtype=I32)
+    flow_ids = consts.flow_ids
     cc = st.cc
 
     pace = st.pace_accum
     if dims.paced:
         pace = jnp.minimum(pace + cc.pacing_rate, 4.0 * float(mtu_i))
 
-    # windowed-alltoall eligibility: < window unfinished predecessors
-    done_p = jnp.pad(st.done, (0, 1), constant_values=True)
-    unfin = (~done_p[consts.flows_of]) & (consts.flows_of < NF)  # [N, FMAX]
-    prior_unfin = jnp.cumsum(unfin, axis=1) - unfin.astype(I32)
-    win_elig = jnp.full((NF + 1,), False).at[consts.flows_of.reshape(-1)].set(
-        (prior_unfin < window).reshape(-1))[:NF]
+    started = (t >= consts.t_start) & ~st.done
+    if window < FMAX:
+        # windowed-alltoall eligibility: < window unfinished predecessors.
+        # Each flow's (sender, column) is static (consts.slot_of), so the
+        # eligibility is a gather from the per-sender prefix count — no
+        # scatter back through flows_of.
+        done_p = jnp.pad(st.done, (0, 1), constant_values=True)
+        unfin = (~done_p[consts.flows_of]) & (consts.flows_of < NF)  # [N, FMAX]
+        prior_unfin = jnp.cumsum(unfin, axis=1) - unfin.astype(I32)
+        started &= prior_unfin[consts.src, consts.slot_of] < window
 
-    started = (t >= consts.t_start) & ~st.done & win_elig
-    has_retx = jnp.any(st.st_state[:NF] == 3, axis=1)
-    retx_slot = jnp.argmax(st.st_state[:NF] == 3, axis=1)
-    retx_seq = st.st_seq[flow_ids, retx_slot]
+    is_retx = st.sent[0, :NF] == 3
+    has_retx = jnp.any(is_retx, axis=1)
+    retx_slot = jnp.argmax(is_retx, axis=1)
+    retx_seq = st.sent[1, flow_ids, retx_slot]
     new_seq = st.next_seq
     new_slot = new_seq % W
     new_ok = (new_seq * mtu_i < consts.size) & \
-        (st.st_state[flow_ids, new_slot] == 0)
+        (st.sent[0, flow_ids, new_slot] == 0)
     seq_emit = jnp.where(has_retx, retx_seq, new_seq)
-    nsize = pkt_size(dims, consts, flow_ids, seq_emit).astype(F32)
+    # flow_ids is the exact [0, NF) iota, so pkt_size's defensive flow clip
+    # (and its gather) is unnecessary — size the packet directly.
+    nsize = jnp.clip(consts.size - seq_emit * mtu_i, 0, mtu_i).astype(F32)
     win_ok = st.unacked + nsize <= cc.cwnd
     credit_ok = True
     if dims.credit_based:
@@ -91,42 +99,50 @@ def sends(dims: Dims, consts: Consts, st: SimState) -> SimState:
     elig = started & (has_retx | new_ok) & win_ok & credit_ok & pace_ok & (nsize > 0)
 
     # per-sender round-robin arbitration (one packet per NIC per tick)
-    E = jnp.pad(elig, (0, 1))[consts.flows_of]                   # [N, FMAX]
-    keys = (jnp.arange(FMAX, dtype=I32)[None, :] - st.rr_send[:, None]) % FMAX
-    keys = jnp.where(E, keys, FMAX + 1)
-    sel = jnp.argmin(keys, axis=1)
-    has_s = jnp.any(E, axis=1)
-    sflow = jnp.where(has_s, consts.flows_of[jnp.arange(N), sel], NF)
-    rr_send = jnp.where(has_s, (sel.astype(I32) + 1) % FMAX, st.rr_send)
+    if FMAX == 1:
+        # at most one flow per sender: arbitration is the identity
+        has_s = jnp.pad(elig, (0, 1))[consts.flows_of[:, 0]]
+        sflow = jnp.where(has_s, consts.flows_of[:, 0], NF)
+        rr_send = st.rr_send
+    else:
+        E = jnp.pad(elig, (0, 1))[consts.flows_of]               # [N, FMAX]
+        keys = (jnp.arange(FMAX, dtype=I32)[None, :] - st.rr_send[:, None]) % FMAX
+        keys = jnp.where(E, keys, FMAX + 1)
+        sel = jnp.argmin(keys, axis=1)
+        has_s = jnp.any(E, axis=1)
+        sflow = jnp.where(has_s, consts.flows_of[consts.node_ids, sel], NF)
+        rr_send = jnp.where(has_s, (sel.astype(I32) + 1) % FMAX, st.rr_send)
 
-    emit_mask = jnp.zeros((NF + 1,), bool).at[sflow].set(has_s)[:NF]
+    # flow f emits iff its own sender selected it (gather, not scatter)
+    emit_mask = sflow[consts.src] == flow_ids
     lb, entropy = reps.on_send(dims.lb_mode, consts.lb, st.lb, emit_mask,
                                seq_emit, flow_ids, t)
     first_q = route_from_sender(dims, consts, flow_ids, entropy)
 
-    # place on the wire
-    send_slot = jnp.where(has_s, (t + consts.lat_q[NQ]) % L, L)
+    # place on the wire — one dynamic-update-slice over the NIC emitter
+    # rows [NQ, NE) at the (uniform) sender latency slot; zeros for idle
+    # NICs are exact because the slot holds no live packet (see the
+    # exclusivity argument in fabric.departures)
     sf = jnp.clip(sflow, 0, NF - 1)
-    spay = jnp.stack([
+    spay = jnp.where(has_s[:, None], jnp.stack([
         has_s.astype(I32),
         first_q[sf],
         sflow,
         seq_emit[sf],
         entropy[sf],
         jnp.zeros((N,), I32),
-        jnp.full((N,), 1, I32) * t,
-    ], axis=1)
-    infl = st.infl.at[send_slot, NQ + jnp.arange(N)].set(spay)
+        jnp.broadcast_to(t, (N,)),
+    ], axis=1), 0)
+    infl = st.infl.at[(t + consts.lat_send) % L, NQ:].set(spay)
 
-    # sent-ring bookkeeping
+    # sent-ring bookkeeping: one packed scatter for state/seq/ts (the
+    # component axis leads, so the three writes share their flow/slot
+    # indices; non-emitting flows land in the write-off row NF)
     eslot = seq_emit % W
     eflow2 = jnp.where(emit_mask, flow_ids, NF)
-    st_state = st.st_state.at[eflow2, eslot].set(
-        jnp.where(emit_mask, 1, st.st_state[eflow2, eslot]))
-    st_seq = st.st_seq.at[eflow2, eslot].set(
-        jnp.where(emit_mask, seq_emit, st.st_seq[eflow2, eslot]))
-    st_ts = st.st_ts.at[eflow2, eslot].set(
-        jnp.where(emit_mask, t, st.st_ts[eflow2, eslot]))
+    upd = jnp.stack([jnp.ones((NF,), I32), seq_emit,
+                     jnp.broadcast_to(t, (NF,))])
+    sent = st.sent.at[:, eflow2, eslot].set(upd, mode="promise_in_bounds")
     is_new_send = emit_mask & ~has_retx
     next_seq = st.next_seq + is_new_send.astype(I32)
     m = m._replace(n_retx=m.n_retx + jnp.sum((emit_mask & has_retx).astype(I32)))
@@ -142,6 +158,6 @@ def sends(dims: Dims, consts: Consts, st: SimState) -> SimState:
         pace = pace - spend
 
     return st._replace(
-        infl=infl, st_state=st_state, st_seq=st_seq, st_ts=st_ts,
+        infl=infl, sent=sent,
         next_seq=next_seq, rr_send=rr_send, pace_accum=pace, cc=cc, lb=lb, m=m,
     )

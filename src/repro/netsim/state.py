@@ -51,6 +51,8 @@ class SimConfig:
     algo: str = "smartt"
     cc_backend: str = "jnp"          # "jnp" | "pallas" (kernels/cc_update)
     lb: str = "reps"
+    superstep: int = 0               # ticks fused per run-loop iteration;
+                                     # 0 = auto (one base RTT), 1 = legacy
     trimming: bool = True
     rto_mult: float = 0.0            # RTO = rto_mult * trtt; 0 = auto
                                      # (3.0 with trimming, 2.0 aggressive without)
@@ -96,6 +98,7 @@ class Dims(NamedTuple):
     mtu: int        # bytes
     brtt_inter: int  # base RTT ticks == BDP packets
     bdp_bytes: float
+    superstep: int  # ticks per fused run-loop iteration (>= 1)
     trimming: bool
     credit_based: bool
     paced: bool
@@ -118,8 +121,10 @@ class Consts(NamedTuple):
     dst: jnp.ndarray             # i32 [NF]
     size: jnp.ndarray            # i32 [NF] flow bytes
     t_start: jnp.ndarray         # i32 [NF]
-    ret: jnp.ndarray             # i32 [NF] ACK return latency
+    ret: jnp.ndarray             # i32 scalar ACK/grant return latency (the
+                                 #   ack ring layout requires it constant)
     flows_of: jnp.ndarray        # i32 [N, FMAX] per-sender flow table
+    slot_of: jnp.ndarray         # i32 [NF] flow's column in flows_of[src]
     flows_by_recv: jnp.ndarray   # i32 [N, FRMAX]
     kind: jnp.ndarray            # i32 [NE] emitter kind
     e_aux: jnp.ndarray           # i32 [NE] spine/rack/node auxiliary index
@@ -135,6 +140,17 @@ class Consts(NamedTuple):
     start_cwnd: jnp.ndarray      # f32 scalar initial cwnd bytes
     cc: CCParams
     lb: reps.LBParams
+    # -- per-tick invariants hoisted out of the phase bodies (the phases
+    #    would otherwise re-materialize these iotas/gathers every tick) --
+    qidx: jnp.ndarray            # i32 [NQ] port iota
+    eidx: jnp.ndarray            # i32 [NE] emitter iota
+    flow_ids: jnp.ndarray        # i32 [NF] flow iota
+    node_ids: jnp.ndarray        # i32 [N] node iota
+    kind_q: jnp.ndarray          # i32 [NQ] = kind[:NQ] (fabric ports only)
+    aux_q: jnp.ndarray           # i32 [NQ] = e_aux[:NQ]
+    lat_core: jnp.ndarray        # i32 scalar t0_up/t1_down wire latency
+    lat_edge: jnp.ndarray        # i32 scalar t0_down wire latency
+    lat_send: jnp.ndarray        # i32 scalar sender-NIC wire latency
 
 
 def pkt_size(dims: Dims, consts: Consts, flow, seq):
@@ -154,16 +170,19 @@ class SimState(NamedTuple):
     q_fields: jnp.ndarray            # i32 [NQ+1, CAP, 5] flow/seq/ent/ecn/ts
     q_head: jnp.ndarray              # i32 [NQ+1]
     q_size: jnp.ndarray              # i32 [NQ+1]
-    infl: jnp.ndarray                # i32 [L+1, NE, 7] valid/dstq/flow/seq/ent/ecn/ts
-    ack_ring: jnp.ndarray            # i32 [R, N+1, 6] valid/flow/seq/ecn/ent/ts
-                                     #   (column N is a write-off sentinel)
-    trim_cnt: jnp.ndarray            # i32 [R, NF+1]
-    trim_bytes: jnp.ndarray          # f32 [R, NF+1]
-    lost_bits: jnp.ndarray           # i32 [R, NF+1, WW]
+    infl: jnp.ndarray                # i32 [L, NE, 7] valid/dstq/flow/seq/ent/ecn/ts
+    ack_ring: jnp.ndarray            # i32 [R, N, 6] valid/flow/seq/ecn/ent/ts
+                                     #   (slot (t+ret)%R written whole per tick:
+                                     #   ret is receiver-constant, so the write
+                                     #   is a dynamic-update-slice, not scatter)
+    trim_ring: jnp.ndarray           # i32 [R, NF+1, 2+WW] cnt/bytes/loss-bitmap
+                                     #   (packed: one scatter per tick feeds the
+                                     #   delayed trim count, bytes, and per-slot
+                                     #   loss words; bytes are exact in i32)
     credit_ring: jnp.ndarray         # f32 [R, NF+1]
-    st_state: jnp.ndarray            # i32 [NF+1, W] 0=free 1=outstanding 3=lost
-    st_seq: jnp.ndarray              # i32 [NF+1, W]
-    st_ts: jnp.ndarray               # i32 [NF+1, W]
+    sent: jnp.ndarray                # i32 [3, NF+1, W] component-major sent ring:
+                                     #   [0]=state (0=free 1=outstanding 3=lost)
+                                     #   [1]=seq  [2]=send tick
     next_seq: jnp.ndarray            # i32 [NF]
     unacked: jnp.ndarray             # f32 [NF] in-flight bytes (phase 3 -> 5)
     done: jnp.ndarray                # bool [NF]
@@ -171,7 +190,9 @@ class SimState(NamedTuple):
     goodput: jnp.ndarray             # i32 [NF] unique bytes delivered
     bitmap: jnp.ndarray              # i32 [NF+1, MAXW] receiver dedupe
     granted: jnp.ndarray             # f32 [NF] EQDS credit issued
-    trim_seen: jnp.ndarray           # f32 [NF] trimmed bytes observed by receiver
+    trim_seen: jnp.ndarray           # f32 [NF+1] trimmed bytes observed by the
+                                     #   receiver (row NF is scatter write-off;
+                                     #   only maintained for credit-based algos)
     rr_recv: jnp.ndarray             # i32 [N]
     rr_send: jnp.ndarray             # i32 [N]
     pace_accum: jnp.ndarray          # f32 [NF]
@@ -209,13 +230,15 @@ def derive(cfg: SimConfig, wl: Workload):
         raise ValueError("flow with src == dst")
 
     # ---- per-flow constants ----
-    # ACK return delay is constant per receiver: the ack ring is indexed
+    # ACK return delay is *globally constant*: the ack ring is indexed
     # (arrival_tick + ret, receiver) and a receiver delivers one packet per
-    # tick, so a *constant* return delay guarantees collision-free slots.
+    # tick, so slot (t + ret) % R belongs exclusively to the deliveries of
+    # tick t — which lets `fabric.arrivals` write the whole [N]-row slot as
+    # one dynamic-update-slice instead of a scatter.
     inter = (wl.src // M) != (wl.dst // M)
     brtt_f = np.where(inter, tm.brtt_inter,
                       tm.fwd_intra + tm.ret_inter).astype(np.float32)
-    ret_f = jnp.full(NF, tm.ret_inter, I32)
+    ret_f = jnp.asarray(tm.ret_inter, I32)
 
     bdp = float(tm.brtt_inter * MTU)
     cc_kwargs = dict(cfg.cc_overrides)
@@ -238,10 +261,12 @@ def derive(cfg: SimConfig, wl: Workload):
     FMAX = max(int(np.max(np.bincount(wl.src, minlength=N))), 1)
     FRMAX = max(int(np.max(np.bincount(wl.dst, minlength=N))), 1)
     flows_of = np.full((N, FMAX), NF, np.int32)
+    slot_of = np.zeros(NF, np.int32)               # inverse of flows_of
     cnt = np.zeros(N, np.int64)
     for f in np.argsort(wl.order, kind="stable"):  # per-sender, ordered
         s = wl.src[f]
         flows_of[s, cnt[s]] = f
+        slot_of[f] = cnt[s]
         cnt[s] += 1
     flows_by_recv = np.full((N, FRMAX), NF, np.int32)
     cnt = np.zeros(N, np.int64)
@@ -252,12 +277,21 @@ def derive(cfg: SimConfig, wl: Workload):
     window = int(min(wl.window, FMAX))
 
     # ---- per-emitter routing constants ----
-    # wire latency after departure, per emitter kind
+    # wire latency after departure, per emitter kind.  fabric.departures /
+    # sender.sends rely on the latency being uniform within each of the
+    # three contiguous emitter classes (core ports, edge ports, sender
+    # NICs) and strictly below the ring length L.
     lat_q = np.zeros(NE, np.int32)
     lat_q[topo.kind == KIND_T0_UP] = link.link_lat_ticks + link.switch_lat_ticks
     lat_q[topo.kind == KIND_T1_DOWN] = link.link_lat_ticks + link.switch_lat_ticks
     lat_q[topo.kind == KIND_T0_DOWN] = link.link_lat_ticks
     lat_q[topo.kind == KIND_SENDER] = 1 + link.link_lat_ticks + link.switch_lat_ticks
+    for cls in (lat_q[:2 * P * U], lat_q[2 * P * U:NQ], lat_q[NQ:]):
+        if not (np.all(cls == cls[0]) and 0 < cls[0] < L):
+            raise ValueError(
+                f"wire latency must be uniform within each emitter class "
+                f"(core/edge/sender) and satisfy 0 < lat < L={L}; got "
+                f"{sorted(set(lat_q.tolist()))}")
 
     # ---- fault maps ----
     service_period = np.ones(NQ, np.int32)
@@ -275,11 +309,15 @@ def derive(cfg: SimConfig, wl: Workload):
     kmin = cfg.kmin_frac * CAP
     kmax = cfg.kmax_frac * CAP
 
+    if cfg.superstep < 0:
+        raise ValueError(f"superstep must be >= 0, got {cfg.superstep}")
+    superstep = int(cfg.superstep) or int(tm.brtt_inter)
+
     dims = Dims(
         N=N, NQ=NQ, NE=NE, NF=NF, CAP=CAP, W=W, WW=WW, L=L, R=R,
         MAXW=MAXW, FMAX=FMAX, FRMAX=FRMAX, P=P, U=U, M=M, PU=P * U,
         window=window, mtu=int(MTU), brtt_inter=int(tm.brtt_inter),
-        bdp_bytes=bdp, trimming=cfg.trimming,
+        bdp_bytes=bdp, superstep=superstep, trimming=cfg.trimming,
         credit_based=cfg.algo in registry.CREDIT_BASED,
         paced=cfg.algo in registry.PACED,
         lb_mode=reps.LB_NAMES[cfg.lb],
@@ -291,6 +329,7 @@ def derive(cfg: SimConfig, wl: Workload):
         t_start=jnp.asarray(wl.t_start, I32),
         ret=ret_f,
         flows_of=jnp.asarray(flows_of),
+        slot_of=jnp.asarray(slot_of),
         flows_by_recv=jnp.asarray(flows_by_recv),
         kind=jnp.asarray(topo.kind, I32),
         e_aux=jnp.asarray(topo.aux, I32),
@@ -306,6 +345,15 @@ def derive(cfg: SimConfig, wl: Workload):
         start_cwnd=jnp.asarray(cfg.start_cwnd_mult * bdp, F32),
         cc=cc_params,
         lb=lb_params,
+        qidx=jnp.arange(NQ, dtype=I32),
+        eidx=jnp.arange(NE, dtype=I32),
+        flow_ids=jnp.arange(NF, dtype=I32),
+        node_ids=jnp.arange(N, dtype=I32),
+        kind_q=jnp.asarray(topo.kind[:NQ], I32),
+        aux_q=jnp.asarray(topo.aux[:NQ], I32),
+        lat_core=jnp.asarray(lat_q[0], I32),
+        lat_edge=jnp.asarray(lat_q[2 * P * U], I32),
+        lat_send=jnp.asarray(lat_q[NQ], I32),
     )
     return topo, tm, dims, consts
 
@@ -322,15 +370,11 @@ def init_state(dims: Dims, consts: Consts) -> SimState:
         q_fields=zeros((NQ + 1, dims.CAP, 5), I32),
         q_head=zeros((NQ + 1,), I32),
         q_size=zeros((NQ + 1,), I32),
-        infl=zeros((dims.L + 1, dims.NE, 7), I32),
-        ack_ring=zeros((dims.R, N + 1, 6), I32),
-        trim_cnt=zeros((dims.R, NF + 1), I32),
-        trim_bytes=zeros((dims.R, NF + 1), F32),
-        lost_bits=zeros((dims.R, NF + 1, dims.WW), I32),
+        infl=zeros((dims.L, dims.NE, 7), I32),
+        ack_ring=zeros((dims.R, N, 6), I32),
+        trim_ring=zeros((dims.R, NF + 1, 2 + dims.WW), I32),
         credit_ring=zeros((dims.R, NF + 1), F32),
-        st_state=zeros((NF + 1, dims.W), I32),
-        st_seq=zeros((NF + 1, dims.W), I32),
-        st_ts=zeros((NF + 1, dims.W), I32),
+        sent=zeros((3, NF + 1, dims.W), I32),
         next_seq=zeros((NF,), I32),
         unacked=zeros((NF,), F32),
         done=zeros((NF,), bool),
@@ -338,7 +382,7 @@ def init_state(dims: Dims, consts: Consts) -> SimState:
         goodput=zeros((NF,), I32),
         bitmap=zeros((NF + 1, dims.MAXW), I32),
         granted=zeros((NF,), F32),
-        trim_seen=zeros((NF,), F32),
+        trim_seen=zeros((NF + 1,), F32),
         rr_recv=zeros((N,), I32),
         rr_send=zeros((N,), I32),
         pace_accum=zeros((NF,), F32),

@@ -90,9 +90,10 @@ class Sweep:
                         axis_size=self.n_points)(self.consts_b)
 
     def run(self, max_ticks: int) -> state.SimState:
-        """Run all points to completion; one step compilation total."""
+        """Run all points to completion; one step compilation total.
+        The freshly built [B]-batched state is donated to the run loop."""
         return _run_sweep(self.sim.step_fn, self.axes, max_ticks,
-                          self.consts_b, self.init())
+                          self.sim.dims.superstep, self.consts_b, self.init())
 
     def summaries(self, states: state.SimState) -> list:
         """Per-point summaries.  Per-flow results (fct/goodput/trims) are
@@ -133,8 +134,12 @@ def build_sweep(cfg: state.SimConfig, wl,
                  consts_b=consts_b, axes=axes)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _run_sweep(step_fn, axes, max_ticks, consts_b, states):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3), donate_argnums=(5,))
+def _run_sweep(step_fn, axes, max_ticks, superstep, consts_b, states):
+    """Superstep-fused sweep loop: the all-done exit reduction (over flows
+    *and* grid points) runs once per ``superstep`` ticks; each fused tick
+    is gated on the same scalar predicate so trajectories stay bit-for-bit
+    identical to the per-tick loop (engine.py run-loop contract)."""
     vstep = jax.vmap(step_fn, in_axes=(axes, 0))
 
     def cond(st):
@@ -143,7 +148,7 @@ def _run_sweep(step_fn, axes, max_ticks, consts_b, states):
     def body(st):
         return vstep(consts_b, st)
 
-    return jax.lax.while_loop(cond, body, states)
+    return engine._superstep_loop(body, cond, superstep)(states)
 
 
 def summarize_batch(sim: engine.Sim, states: state.SimState) -> list:

@@ -27,64 +27,73 @@ def control(dims: Dims, consts: Consts, cc_update, st: SimState) -> SimState:
     m = st.m
     NF, N, R, W = dims.NF, dims.N, dims.R, dims.W
     MTU = float(dims.mtu)
-    flow_ids = jnp.arange(NF, dtype=I32)
+    flow_ids = consts.flow_ids
 
-    acks = st.ack_ring[t % R][:N]                      # [N, 6] (drop sentinel)
-    ack_ring = st.ack_ring.at[t % R].set(0)
+    acks = st.ack_ring[t % R]                          # [N, 6]
+    # no post-read zeroing needed: arrivals blanket-rewrites the whole
+    # [N]-row slot (t+ret) % R every tick before it is read again
+    ack_ring = st.ack_ring
     v = acks[:, 0] == 1
     idxf = jnp.where(v, acks[:, 1], NF)
 
-    def scat(vals, fill=0):
-        return jnp.full((NF + 1,), fill, vals.dtype).at[idxf].set(vals)[:NF]
-
-    has_ack = jnp.zeros((NF + 1,), bool).at[idxf].set(v)[:NF]
-    ack_seq = scat(acks[:, 2])
-    ack_ecn = jnp.zeros((NF + 1,), bool).at[idxf].set(acks[:, 3] == 1)[:NF]
-    ack_ent = scat(acks[:, 4])
-    ack_ts = scat(acks[:, 5])
+    # one packed flow-major scatter for all five ACK columns (same indices;
+    # five separate scatters cost ~5x the XLA:CPU scatter overhead)
+    by_flow = jnp.zeros((NF + 1, 6), I32).at[idxf].set(
+        acks, mode="promise_in_bounds")[:NF]
+    has_ack = by_flow[:, 0] == 1
+    ack_seq = jnp.where(has_ack, by_flow[:, 2], 0)
+    ack_ecn = has_ack & (by_flow[:, 3] == 1)
+    ack_ent = jnp.where(has_ack, by_flow[:, 4], 0)
+    ack_ts = jnp.where(has_ack, by_flow[:, 5], 0)
     rtt = jnp.where(has_ack, (t - ack_ts).astype(F32), 0.0)
     ack_bytes = jnp.where(
         has_ack, pkt_size(dims, consts, flow_ids, ack_seq).astype(F32), 0.0)
 
-    trims = st.trim_cnt[t % R][:NF]
-    tbytes = st.trim_bytes[t % R][:NF]
-    lbits = st.lost_bits[t % R][:NF]
+    tr = st.trim_ring[t % R][:NF]                      # [NF, 2+WW] packed
+    trims = tr[:, 0]
+    tbytes = tr[:, 1].astype(F32)
+    lbits = tr[:, 2:]
     cred = st.credit_ring[t % R][:NF]
-    trim_cnt = st.trim_cnt.at[t % R].set(0)
-    trim_bytes = st.trim_bytes.at[t % R].set(0.0)
-    lost_bits = st.lost_bits.at[t % R].set(0)
+    trim_ring = st.trim_ring.at[t % R].set(0)
     credit_ring = st.credit_ring.at[t % R].set(0.0)
 
-    # transport: free the ACKed slot
+    # transport: free the ACKed slot, mark trim/timeout losses — all as
+    # dense [NF, W] masks folded into ONE contiguous write of the state
+    # component (XLA:CPU runs a 4K-element fused loop far faster than a
+    # scatter + two slice-updates; sent ring is component-major [3,.,.]:
+    # 0=state, 1=seq, 2=send tick)
+    wbits = jnp.arange(W, dtype=I32)
     aslot2 = ack_seq % W
-    cur = st.st_state[flow_ids, aslot2]
-    cur_seq = st.st_seq[flow_ids, aslot2]
+    cur = st.sent[0, flow_ids, aslot2]
+    cur_seq = st.sent[1, flow_ids, aslot2]
     match = has_ack & (cur != 0) & (cur_seq == ack_seq)
-    st_state = st.st_state.at[flow_ids, aslot2].set(jnp.where(match, 0, cur))
+    st_state = st.sent[0, :NF]
+    freed = match[:, None] & (wbits[None, :] == aslot2[:, None])
+    st_state = jnp.where(freed, 0, st_state)
 
     # trimmed packets -> lost (awaiting retransmission)
-    wbits = jnp.arange(W, dtype=I32)
     bitsel = (lbits[:, wbits // 32] >> (wbits % 32)) & 1      # [NF, W]
-    lost_mask = (bitsel == 1) & (st_state[:NF] == 1)
-    st_state = st_state.at[:NF].set(jnp.where(lost_mask, 3, st_state[:NF]))
+    lost_mask = (bitsel == 1) & (st_state == 1)
+    st_state = jnp.where(lost_mask, 3, st_state)
 
     # timeouts
     started_flows = (t >= consts.t_start) & ~st.done
-    to_mask = (st_state[:NF] == 1) & \
-        ((t - st.st_ts[:NF]).astype(F32) > consts.rto[:, None]) & \
+    to_mask = (st_state == 1) & \
+        ((t - st.sent[2, :NF]).astype(F32) > consts.rto[:, None]) & \
         started_flows[:, None]
     # count a spurious retx when the receiver already has the packet
-    sp_word = st.st_seq[:NF] // 32
-    sp_bit = st.st_seq[:NF] % 32
+    sp_word = st.sent[1, :NF] // 32
+    sp_bit = st.sent[1, :NF] % 32
     already = ((st.bitmap[:NF][jnp.arange(NF)[:, None], sp_word] >> sp_bit) & 1) == 1
     m = m._replace(spurious_retx=m.spurious_retx
                    + jnp.sum((to_mask & already).astype(I32)))
-    st_state = st_state.at[:NF].set(jnp.where(to_mask, 3, st_state[:NF]))
+    st_state = jnp.where(to_mask, 3, st_state)
+    sent = st.sent.at[0, :NF].set(st_state)
     n_to = jnp.sum(to_mask.astype(I32), axis=1)
     to_bytes = n_to.astype(F32) * MTU
     m = m._replace(n_to=m.n_to + jnp.sum(n_to))
 
-    unacked = jnp.sum((st_state[:NF] == 1).astype(I32), axis=1).astype(F32) * MTU
+    unacked = jnp.sum((st_state == 1).astype(I32), axis=1).astype(F32) * MTU
 
     ev = CCEvent(
         has_ack=has_ack, ack_bytes=ack_bytes, ecn=ack_ecn, rtt=rtt,
@@ -95,15 +104,19 @@ def control(dims: Dims, consts: Consts, cc_update, st: SimState) -> SimState:
     cc = cc_update(consts.cc, st.cc, ev, t)
     lb = reps.on_ack(dims.lb_mode, consts.lb, st.lb, has_ack, ack_ecn, ack_ent,
                      flow_ids, t)
-    # RTT histogram
+    # RTT histogram — one-hot reduce instead of a scatter-add ([NF, BINS]
+    # fused compare+sum beats the XLA:CPU scatter loop)
     bins = jnp.clip((rtt * (8.0 / dims.brtt_inter)).astype(I32), 0, HIST_BINS - 1)
+    hist_inc = jnp.sum(
+        (has_ack[:, None] &
+         (bins[:, None] == jnp.arange(HIST_BINS, dtype=I32))).astype(I32),
+        axis=0)
     m = m._replace(
-        rtt_hist=m.rtt_hist.at[jnp.where(has_ack, bins, 0)].add(has_ack.astype(I32)),
+        rtt_hist=m.rtt_hist + hist_inc,
         n_ack=m.n_ack + jnp.sum(has_ack.astype(I32)),
     )
 
     return st._replace(
-        ack_ring=ack_ring, trim_cnt=trim_cnt, trim_bytes=trim_bytes,
-        lost_bits=lost_bits, credit_ring=credit_ring, st_state=st_state,
-        unacked=unacked, cc=cc, lb=lb, m=m,
+        ack_ring=ack_ring, trim_ring=trim_ring, credit_ring=credit_ring,
+        sent=sent, unacked=unacked, cc=cc, lb=lb, m=m,
     )

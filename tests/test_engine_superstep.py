@@ -1,0 +1,137 @@
+"""Superstep execution engine: K>1 runs must be bit-for-bit identical to
+K=1 (the per-tick gate makes fused ticks exact, not approximate), across
+CC backends, the batched runner, and the config sweep; and the per-seed
+salt decorrelation of run_batch must actually change RED marking."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.netsim import engine, workloads
+from repro.netsim.engine import SimConfig, build
+from repro.netsim.sweep import build_sweep
+from repro.netsim.units import FatTreeConfig, LinkConfig
+
+TREE = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=2)
+OVERSUB = FatTreeConfig(racks=2, nodes_per_rack=8, uplinks=2)   # 4:1
+LINK = LinkConfig()
+
+
+def _run(tree, wl, superstep, max_ticks=30000, **kw):
+    sim = build(SimConfig(link=LINK, tree=tree, superstep=superstep, **kw), wl)
+    st = sim.run(max_ticks=max_ticks)
+    st.now.block_until_ready()
+    return sim, st
+
+
+def _assert_state_equal(st_a, st_b):
+    """Full-pytree bitwise equality — stronger than the acceptance bar
+    (fct/goodput/cwnd): every state leaf, metrics counters included."""
+    la, lb = jax.tree.leaves(st_a), jax.tree.leaves(st_b)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_superstep_bit_for_bit_equals_k1(backend):
+    wl = workloads.incast(TREE, degree=3, size_bytes=16 * 4096, seed=0)
+    _, st1 = _run(TREE, wl, superstep=1, cc_backend=backend)
+    for k in (0, 7):          # 0 = auto (one base RTT); 7 doesn't divide
+        _, stk = _run(TREE, wl, superstep=k, cc_backend=backend)
+        np.testing.assert_array_equal(np.asarray(st1.fct), np.asarray(stk.fct))
+        np.testing.assert_array_equal(np.asarray(st1.goodput),
+                                      np.asarray(stk.goodput))
+        np.testing.assert_array_equal(np.asarray(st1.cc.cwnd),
+                                      np.asarray(stk.cc.cwnd))
+        assert int(st1.now) == int(stk.now)
+        _assert_state_equal(st1, stk)
+
+
+def test_superstep_exact_under_congestion_and_trimming():
+    """An oversubscribed permutation exercises trims, retransmissions, and
+    RED marking; the fused loop must still match K=1 exactly."""
+    wl = workloads.permutation(OVERSUB, size_bytes=64 * 4096, seed=1)
+    _, st1 = _run(OVERSUB, wl, superstep=1)
+    _, stk = _run(OVERSUB, wl, superstep=0)
+    assert int(st1.m.n_trim) > 0          # the scenario actually trims
+    _assert_state_equal(st1, stk)
+
+
+def test_run_batch_matches_k1_and_decorrelates_red():
+    """run_batch composes with supersteps, and the per-seed salts change
+    RED marking outcomes (different mark draws -> different trajectories),
+    while seed 0 reproduces the unbatched run exactly."""
+    wl = workloads.permutation(OVERSUB, size_bytes=64 * 4096, seed=2)
+    sim1 = build(SimConfig(link=LINK, tree=OVERSUB, superstep=1), wl)
+    simk = build(SimConfig(link=LINK, tree=OVERSUB, superstep=0), wl)
+    stb = simk.run_batch(np.arange(4), max_ticks=30000)
+    st1 = sim1.run(max_ticks=30000)
+
+    # batch element 0 carries salt 0 == the unbatched run
+    np.testing.assert_array_equal(np.asarray(st1.fct), np.asarray(stb.fct)[0])
+    np.testing.assert_array_equal(np.asarray(st1.goodput),
+                                  np.asarray(stb.goodput)[0])
+
+    # decorrelation: the salt feeds the RED mark draw, so marking-driven
+    # outcomes (ECN-driven cwnd trajectories -> fct) differ across seeds
+    fcts = [tuple(np.asarray(stb.fct)[i]) for i in range(4)]
+    assert len(set(fcts)) > 1
+    hists = [tuple(np.asarray(stb.m.rtt_hist)[i]) for i in range(4)]
+    assert len(set(hists)) > 1
+
+
+def test_sweep_composes_with_supersteps():
+    """The vmapped sweep under a superstep loop stays one-compile and
+    matches the per-tick sweep point-for-point."""
+    wl = workloads.incast(TREE, degree=4, size_bytes=32 * 4096, seed=1)
+    points = [{"start_cwnd_mult": a} for a in (0.5, 1.0, 1.25)]
+    cfg1 = SimConfig(link=LINK, tree=TREE, superstep=1)
+    cfgk = SimConfig(link=LINK, tree=TREE, superstep=13)
+
+    swk = build_sweep(cfgk, wl, points)
+    before = engine.STEP_TRACE_COUNT[0]
+    states_k = swk.run(max_ticks=30000)
+    states_k.now.block_until_ready()
+    assert engine.STEP_TRACE_COUNT[0] - before == 1
+
+    states_1 = build_sweep(cfg1, wl, points).run(max_ticks=30000)
+    np.testing.assert_array_equal(np.asarray(states_1.fct),
+                                  np.asarray(states_k.fct))
+    np.testing.assert_array_equal(np.asarray(states_1.goodput),
+                                  np.asarray(states_k.goodput))
+    np.testing.assert_array_equal(np.asarray(states_1.cc.cwnd),
+                                  np.asarray(states_k.cc.cwnd))
+    assert int(states_1.now[0]) == int(states_k.now[0])
+
+
+def test_donated_state_is_consumed():
+    """The run loops donate their input state: callers must not reuse a
+    SimState after passing it to a run loop (DESIGN.md Sec. 6 contract).
+    Sim.run builds a fresh init() per call, so back-to-back runs agree."""
+    wl = workloads.incast(TREE, degree=3, size_bytes=16 * 4096, seed=3)
+    sim, st_a = _run(TREE, wl, superstep=0)
+    st_b = sim.run(max_ticks=30000)
+    np.testing.assert_array_equal(np.asarray(st_a.fct), np.asarray(st_b.fct))
+
+
+def test_legacy_baseline_matches_production_trajectory():
+    """benchmarks/legacy.py (the perf baseline) must stay a faithful
+    *semantic* twin of the production step — only the op structure may
+    differ — so ticks/sec comparisons measure the engine, not the load.
+    (Compared on simulated outcomes, not the full pytree: the baseline
+    intentionally keeps the seed's unconditional trim_seen ledger, which
+    the production step gates on credit-based algorithms.)"""
+    pytest.importorskip("benchmarks.legacy")
+    from benchmarks.legacy import build_legacy
+    from benchmarks.perf import _run_k1_ungated
+
+    wl = workloads.permutation(OVERSUB, size_bytes=64 * 4096, seed=4)
+    cfg = SimConfig(link=LINK, tree=OVERSUB)
+    leg = build_legacy(cfg, wl)
+    st_l = _run_k1_ungated(leg.step, leg.init(), 30000)
+    _, st_p = _run(OVERSUB, wl, superstep=0)
+    np.testing.assert_array_equal(np.asarray(st_l.fct), np.asarray(st_p.fct))
+    np.testing.assert_array_equal(np.asarray(st_l.goodput),
+                                  np.asarray(st_p.goodput))
+    assert int(st_l.now) == int(st_p.now)
