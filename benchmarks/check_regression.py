@@ -1,0 +1,77 @@
+"""Compare a freshly measured perf section against the committed
+``BENCH_netsim.json`` ledger and *warn* on ticks/sec regressions.
+
+CI's bench smoke job runs ``benchmarks.perf --quick`` into a scratch path
+and then::
+
+  python -m benchmarks.check_regression --fresh fresh.json \
+      --ledger BENCH_netsim.json [--threshold 0.30] [--section perf]
+
+Rows are matched by ``name``; only rows carrying ``ticks_per_sec`` in both
+documents are compared.  A fresh row more than ``threshold`` below the
+ledger prints a GitHub ``::warning::`` annotation (and a plain line for
+local runs).  Exit code stays 0 — machine-speed drift on shared CI runners
+makes a hard gate flakier than it is useful; the ledger itself is the
+reviewed artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str, section: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("sections", {}).get(section, {}).get("rows", [])
+    return {r["name"]: r for r in rows
+            if isinstance(r, dict) and "name" in r
+            and isinstance(r.get("ticks_per_sec"), (int, float))}
+
+
+def compare(fresh: dict, ledger: dict, threshold: float):
+    """Yields (name, fresh_tps, ledger_tps, ratio) for regressed rows."""
+    for name, row in sorted(fresh.items()):
+        base = ledger.get(name)
+        if base is None:
+            continue
+        f_tps, l_tps = row["ticks_per_sec"], base["ticks_per_sec"]
+        if l_tps > 0 and f_tps < (1.0 - threshold) * l_tps:
+            yield name, f_tps, l_tps, f_tps / l_tps
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--fresh", required=True, help="freshly measured ledger")
+    p.add_argument("--ledger", required=True, help="committed ledger")
+    p.add_argument("--section", default="perf")
+    p.add_argument("--threshold", type=float, default=0.30,
+                   help="warn when fresh ticks/sec drops more than this "
+                        "fraction below the ledger (default 0.30)")
+    args = p.parse_args(argv)
+
+    fresh = load_rows(args.fresh, args.section)
+    ledger = load_rows(args.ledger, args.section)
+    common = sorted(set(fresh) & set(ledger))
+    print(f"# comparing {len(common)} row(s) "
+          f"({len(fresh)} fresh, {len(ledger)} in ledger), "
+          f"threshold {args.threshold:.0%}")
+    for name in common:
+        print(f"#   {name}: {fresh[name]['ticks_per_sec']:.0f} vs "
+              f"{ledger[name]['ticks_per_sec']:.0f} ticks/sec")
+
+    regressions = list(compare(fresh, ledger, args.threshold))
+    for name, f_tps, l_tps, ratio in regressions:
+        msg = (f"perf regression {name}: {f_tps:.0f} ticks/sec vs "
+               f"{l_tps:.0f} in the ledger ({ratio:.2f}x)")
+        print(f"::warning title=bench regression::{msg}")
+        print(msg, file=sys.stderr)
+    if not regressions:
+        print("# no regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,18 @@ KiB = 1024
 MiB = 1024 * 1024
 
 
-def fig2_signals():
+def _sz(size_bytes: int, quick: bool) -> int:
+    """Quick-mode message scaling (smoke runs; ledger rows come from the
+    full-size run -- benchmarks/run.py routes quick rows to a separate
+    section)."""
+    return max(16 * KiB, size_bytes // 8) if quick else size_bytes
+
+
+def _mt(max_ticks: int, quick: bool) -> int:
+    return max(4000, max_ticks // 8) if quick else max_ticks
+
+
+def fig2_signals(quick=False):
     """Fig. 2/3a: ECN reacts faster, delay is fairer, SMaRTT gets both.
 
     Reports both the FCT outcome and the Fig. 2 quantity itself: the tick
@@ -29,13 +40,15 @@ def fig2_signals():
     from repro.netsim.engine import SimConfig, build
 
     rows = []
-    wl = workloads.incast(TREE_FLAT, degree=8, size_bytes=512 * KiB, seed=0)
+    wl = workloads.incast(TREE_FLAT, degree=8,
+                          size_bytes=_sz(512 * KiB, quick), seed=0)
     fair = 26 * 4096 / 8 * 1.25          # BDP share of the bottleneck
     for algo in ("ecn_only", "delay_only", "smartt"):
-        s = run_scenario(TREE_FLAT, wl, algo=algo)
+        s = run_scenario(TREE_FLAT, wl, algo=algo,
+                         max_ticks=_mt(60000, quick))
         sim = build(SimConfig(link=LINK, tree=TREE_FLAT, algo=algo, lb="reps"), wl)
         t0 = _t.time()
-        _, ys = sim.run_trace(512, trace_flows=8)
+        _, ys = sim.run_trace(128 if quick else 512, trace_flows=8)
         mean_cwnd = np.asarray(ys["cwnd"]).mean(axis=1)
         conv = np.argmax(mean_cwnd <= 1.5 * fair)
         if mean_cwnd.min() > 1.5 * fair:
@@ -47,13 +60,15 @@ def fig2_signals():
     return rows
 
 
-def fig3b_granularity():
+def fig3b_granularity(quick=False):
     """Fig. 3b: reacting every N ACKs (N<=50) stays within ~5% of per-packet."""
     rows = []
-    wl = workloads.incast(TREE_FLAT, degree=8, size_bytes=512 * KiB, seed=0)
+    wl = workloads.incast(TREE_FLAT, degree=8,
+                          size_bytes=_sz(512 * KiB, quick), seed=0)
     base = None
     for n in (1, 8, 50):
-        s = run_scenario(TREE_FLAT, wl, algo="smartt", react_every=n)
+        s = run_scenario(TREE_FLAT, wl, algo="smartt", react_every=n,
+                         max_ticks=_mt(60000, quick))
         base = base or s["completion"]
         rows.append(emit(f"fig3b_react_every_{n}", s["wall_s"],
                          f"completion={s['completion']};"
@@ -61,63 +76,73 @@ def fig3b_granularity():
     return rows
 
 
-def fig5b_wtd():
+def fig5b_wtd(quick=False):
     """Fig. 5b: Wait-to-Decrease cuts FCT on a non-oversubscribed
     permutation (transient ECMP imbalance left to REPS, not the window)."""
     rows = []
-    wl = workloads.permutation(TREE_FLAT, size_bytes=1 * MiB, seed=2)
+    wl = workloads.permutation(TREE_FLAT, size_bytes=_sz(1 * MiB, quick),
+                               seed=2)
     for name, ovr in (("wtd_on", ()), ("wtd_off", (("wtd_thresh", 0.0),))):
-        s = run_scenario(TREE_FLAT, wl, algo="smartt", cc_overrides=ovr)
+        s = run_scenario(TREE_FLAT, wl, algo="smartt", cc_overrides=ovr,
+                         max_ticks=_mt(60000, quick))
         rows.append(emit(f"fig5b_{name}", s["wall_s"],
                          f"completion={s['completion']};jain={s['jain']:.3f}"))
     return rows
 
 
-def fig6_reps():
+def fig6_reps(quick=False):
     """Fig. 6: REPS vs oblivious spray vs per-flow ECMP vs PLB."""
     rows = []
-    wl = workloads.permutation(TREE_4TO1, size_bytes=1 * MiB, seed=3)
+    wl = workloads.permutation(TREE_4TO1, size_bytes=_sz(1 * MiB, quick),
+                               seed=3)
     for lb in ("reps", "spray", "plb", "ecmp"):
-        s = run_scenario(TREE_4TO1, wl, algo="smartt", lb=lb)
+        s = run_scenario(TREE_4TO1, wl, algo="smartt", lb=lb,
+                         max_ticks=_mt(60000, quick))
         rows.append(emit(f"fig6_lb_{lb}", s["wall_s"],
                          f"completion={s['completion']};jain={s['jain']:.3f};"
                          f"trims={s['trims']}"))
     return rows
 
 
-def fig7_faults():
+def fig7_faults(quick=False):
     """Fig. 7: asymmetric (half-rate) link and link failure — REPS routes
     around; oblivious spray keeps hitting the bad path."""
     rows = []
     tree = TREE_FLAT
-    wl = workloads.permutation(tree, size_bytes=1 * MiB, seed=4)
+    wl = workloads.permutation(tree, size_bytes=_sz(1 * MiB, quick), seed=4)
     for lb in ("reps", "spray"):
         s = run_scenario(tree, wl, algo="smartt", lb=lb,
-                         faults=((0, 3, 2),), fault_start=0)
+                         faults=((0, 3, 2),), fault_start=0,
+                         max_ticks=_mt(60000, quick))
         rows.append(emit(f"fig7a_degraded_{lb}", s["wall_s"],
                          f"completion={s['completion']};trims={s['trims']}"))
     for lb in ("reps", "spray"):
         s = run_scenario(tree, wl, algo="smartt", lb=lb,
-                         faults=((0, 3, 0),), fault_start=200)
+                         faults=((0, 3, 0),), fault_start=200,
+                         max_ticks=_mt(60000, quick))
         rows.append(emit(f"fig7c_linkdown_{lb}", s["wall_s"],
                          f"completion={s['completion']};"
                          f"blackholed={s['blackholed']}"))
     return rows
 
 
-def fig9_trimming():
+def fig9_trimming(quick=False):
     """Fig. 8/9: losing trimming costs ~a base RTT or two, not more."""
     rows = []
     brtt = 26
     cases = [
         ("incast16_512K", TREE_FLAT,
-         workloads.incast(TREE_FLAT, degree=16, size_bytes=512 * KiB, seed=5)),
+         workloads.incast(TREE_FLAT, degree=16,
+                          size_bytes=_sz(512 * KiB, quick), seed=5)),
         ("perm_4to1_1M", TREE_4TO1,
-         workloads.permutation(TREE_4TO1, size_bytes=1 * MiB, seed=5)),
+         workloads.permutation(TREE_4TO1, size_bytes=_sz(1 * MiB, quick),
+                               seed=5)),
     ]
     for name, tree, wl in cases:
-        base = run_scenario(tree, wl, algo="smartt", trimming=True)
-        noto = run_scenario(tree, wl, algo="smartt", trimming=False)
+        base = run_scenario(tree, wl, algo="smartt", trimming=True,
+                            max_ticks=_mt(60000, quick))
+        noto = run_scenario(tree, wl, algo="smartt", trimming=False,
+                            max_ticks=_mt(60000, quick))
         delta = (noto["completion"] - base["completion"]) / brtt
         rows.append(emit(f"fig9_{name}", base["wall_s"] + noto["wall_s"],
                          f"trim={base['completion']};timeout={noto['completion']};"
@@ -126,15 +151,17 @@ def fig9_trimming():
     return rows
 
 
-def fig10_incast():
+def fig10_incast(quick=False):
     """Fig. 10: incast across degrees/sizes — EQDS near-perfect, SMaRTT
     within a few %, MPRDMA less fair, BBR slow for mid sizes."""
     rows = []
     for degree, size in ((8, 256 * KiB), (24, 512 * KiB)):
+        size = _sz(size, quick)
         wl = workloads.incast(TREE_FLAT, degree=degree, size_bytes=size, seed=6)
         ideal = degree * (size // 4096) + 26
         for algo in ("smartt", "swift", "mprdma", "bbr", "eqds"):
-            s = run_scenario(TREE_FLAT, wl, algo=algo)
+            s = run_scenario(TREE_FLAT, wl, algo=algo,
+                             max_ticks=_mt(60000, quick))
             rows.append(emit(
                 f"fig10_incast{degree}_{size//KiB}K_{algo}", s["wall_s"],
                 f"completion={s['completion']};vs_ideal="
@@ -142,57 +169,64 @@ def fig10_incast():
     return rows
 
 
-def fig11_permutation():
+def fig11_permutation(quick=False):
     """Fig. 1/11: permutations under oversubscription — SMaRTT fastest &
     fair; EQDS wastes bandwidth on trims; one-big-flow favors FastIncrease."""
     rows = []
     for name, tree in (("8to1", TREE_8TO1), ("4to1", TREE_4TO1),
                        ("2to1", TREE_2TO1)):
-        wl = workloads.permutation(tree, size_bytes=512 * KiB, seed=7)
+        wl = workloads.permutation(tree, size_bytes=_sz(512 * KiB, quick),
+                                   seed=7)
         for algo in ("smartt", "swift", "mprdma", "bbr", "eqds"):
-            s = run_scenario(tree, wl, algo=algo, max_ticks=120000)
+            s = run_scenario(tree, wl, algo=algo,
+                             max_ticks=_mt(120000, quick))
             rows.append(emit(
                 f"fig11_perm_{name}_{algo}", s["wall_s"],
                 f"completion={s['completion']};jain={s['jain']:.3f};"
                 f"trims={s['trims']}"))
     # Fig 11c: multiple concurrent permutations
-    wl = workloads.permutation(TREE_4TO1, size_bytes=512 * KiB, seed=8,
-                               n_perms=2)
+    wl = workloads.permutation(TREE_4TO1, size_bytes=_sz(512 * KiB, quick),
+                               seed=8, n_perms=2)
     for algo in ("smartt", "eqds"):
-        s = run_scenario(TREE_4TO1, wl, algo=algo, max_ticks=120000)
+        s = run_scenario(TREE_4TO1, wl, algo=algo,
+                         max_ticks=_mt(120000, quick))
         rows.append(emit(f"fig11c_multiperm_{algo}", s["wall_s"],
                          f"completion={s['completion']};trims={s['trims']}"))
     # Fig 11d: one bigger flow — FastIncrease reclaims bandwidth
-    wl = workloads.permutation(TREE_4TO1, size_bytes=512 * KiB, seed=9,
-                               big_flow=(0, 1 * MiB))
+    wl = workloads.permutation(TREE_4TO1, size_bytes=_sz(512 * KiB, quick),
+                               seed=9, big_flow=(0, _sz(1 * MiB, quick)))
     for algo in ("smartt", "swift"):
-        s = run_scenario(TREE_4TO1, wl, algo=algo, max_ticks=120000)
+        s = run_scenario(TREE_4TO1, wl, algo=algo,
+                         max_ticks=_mt(120000, quick))
         rows.append(emit(f"fig11d_bigflow_{algo}", s["wall_s"],
                          f"completion={s['completion']}"))
     return rows
 
 
-def fig12_alltoall():
+def fig12_alltoall(quick=False):
     """Fig. 12: windowed alltoall (MoE traffic) — sender-based CC wins as
     parallel connections grow."""
     rows = []
     tree = TREE_4TO1
-    wl = workloads.alltoall(tree, size_bytes=64 * KiB, window=4, nodes=16)
+    wl = workloads.alltoall(tree, size_bytes=_sz(64 * KiB, quick), window=4,
+                            nodes=16)
     for algo in ("smartt", "swift", "eqds"):
-        s = run_scenario(tree, wl, algo=algo, max_ticks=200000)
+        s = run_scenario(tree, wl, algo=algo, max_ticks=_mt(200000, quick))
         rows.append(emit(f"fig12_alltoall_w4_{algo}", s["wall_s"],
                          f"completion={s['completion']};trims={s['trims']};"
                          f"done={s['n_done']}"))
     return rows
 
 
-def fig13_eqds():
+def fig13_eqds(quick=False):
     """Fig. 13 / Sec. 5.1: EQDS augmented with SMaRTT fixes fabric
     congestion that vanilla EQDS cannot manage."""
     rows = []
-    wl = workloads.permutation(TREE_8TO1, size_bytes=512 * KiB, seed=10)
+    wl = workloads.permutation(TREE_8TO1, size_bytes=_sz(512 * KiB, quick),
+                               seed=10)
     for algo in ("eqds", "eqds_smartt", "smartt"):
-        s = run_scenario(TREE_8TO1, wl, algo=algo, max_ticks=120000)
+        s = run_scenario(TREE_8TO1, wl, algo=algo,
+                         max_ticks=_mt(120000, quick))
         rows.append(emit(f"fig13_{algo}", s["wall_s"],
                          f"completion={s['completion']};trims={s['trims']};"
                          f"jain={s['jain']:.3f}"))

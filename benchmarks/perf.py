@@ -7,6 +7,11 @@ loop whose all-done exit reduction runs every tick.  Variants are measured
 interleaved (round-robin over reps, best-of) so machine-load drift does
 not bias one variant.
 
+The sparse/large-message scenarios (``sparse_heavy``/``sparse_large``,
+DESIGN.md Sec. 6.3) are additionally measured with event-horizon time
+leaping on vs off: the trajectory is bit-for-bit identical (asserted in
+tests/test_engine_leap.py), so the ticks/sec ratio isolates the leap.
+
 Prints the usual ``name,us_per_call,derived`` CSV rows and always records
 a machine-readable ``perf`` section into ``BENCH_netsim.json`` (see
 ``benchmarks.common.write_bench_json``) so ticks/sec is tracked
@@ -85,37 +90,74 @@ def scenarios(quick: bool):
     ]
 
 
+def leap_scenarios(quick: bool):
+    """(name, tree, workload, max_ticks) for the sparse/large-message
+    scenarios measured leap-on vs leap-off.  Sized so the fabric idles for
+    most of the simulated span (heavy-tailed sizes with spread-out
+    arrivals; few large staggered transfers)."""
+    if quick:
+        return [
+            ("tiny_sparse", TREE_TINY,
+             workloads.heavy_tailed(TREE_TINY, 8, size_base=8 * KiB,
+                                    size_cap=256 * KiB, gap_mean=1500.0,
+                                    seed=1),
+             30000),
+        ]
+    return [
+        ("sparse_heavy_32n", TREE_FLAT,
+         workloads.heavy_tailed(TREE_FLAT, 24, size_base=16 * KiB,
+                                size_cap=2 * MiB, gap_mean=2500.0, seed=3),
+         100000),
+        ("sparse_large_32n", TREE_FLAT,
+         workloads.staggered_large(TREE_FLAT, 8, 2 * MiB, gap_ticks=6000,
+                                   seed=0),
+         100000),
+    ]
+
+
 def superstep_sizes(brtt: int, quick: bool):
     ks = [1, brtt] if quick else [1, 8, brtt, 2 * brtt]
     return sorted(set(ks))
 
 
+def _measure(variants, reps):
+    """Warm every variant (compile + first run), then time them interleaved
+    (round-robin over reps, best-of) so machine-load drift does not bias
+    one variant.  Returns ({label: best wall}, {label: simulated ticks})."""
+    walls, ticks = {}, {}
+    for label, fn in variants.items():
+        st = fn()
+        st.now.block_until_ready()
+        ticks[label] = int(st.now)
+        walls[label] = float("inf")
+    for _ in range(reps):
+        for label, fn in variants.items():
+            t0 = time.time()
+            fn().now.block_until_ready()
+            walls[label] = min(walls[label], time.time() - t0)
+    return walls, ticks
+
+
 def bench_scenario(name, tree, wl, max_ticks, backend, reps, quick):
     """Measure the ungated reference and every superstep size, interleaved.
-    Returns one row dict per variant."""
+    Returns one row dict per variant.  The k-variants run the *production
+    default* engine config (time leaping included — a no-op jump on these
+    dense scenarios beyond the per-superstep horizon cost); each row
+    records its ``leap`` flag so ledger comparisons are labeled."""
     cfg0 = SimConfig(link=LINK, tree=tree, algo="smartt", cc_backend=backend)
     base_sim = build(cfg0, wl)
     # baseline: the pre-PR engine — legacy tick op structure under the
     # ungated one-tick-per-iteration while loop (see benchmarks/legacy.py)
     variants = {"k1_ungated": _legacy_baseline(cfg0, wl, max_ticks)}
+    sims = {}
     ksizes = superstep_sizes(base_sim.dims.brtt_inter, quick)
     for k in ksizes:
         sim = build(SimConfig(link=LINK, tree=tree, algo="smartt",
                               cc_backend=backend, superstep=k), wl)
+        sims[f"k{k}"] = sim
         variants[f"k{k}"] = (lambda s=sim: s.run(max_ticks))
 
-    walls, ticks = {}, {}
-    for label, fn in variants.items():       # warmup: compile + first run
-        st = fn()
-        st.now.block_until_ready()
-        ticks[label] = int(st.now)
-        walls[label] = float("inf")
-    for _ in range(reps):                    # interleaved best-of
-        for label, fn in variants.items():
-            t0 = time.time()
-            fn().now.block_until_ready()
-            walls[label] = min(walls[label], time.time() - t0)
-
+    walls, ticks = _measure(variants, reps)
     base_tps = ticks["k1_ungated"] / walls["k1_ungated"]
     rows = []
     for label in variants:
@@ -127,9 +169,39 @@ def bench_scenario(name, tree, wl, max_ticks, backend, reps, quick):
              f"speedup_vs_k1_ungated={speedup:.2f}")
         rows.append(dict(
             name=f"{name}/{backend}/{label}", scenario=name, backend=backend,
-            superstep=k, ticks=ticks[label], wall_s=round(walls[label], 6),
+            superstep=k,
+            leap=bool(sims[label].dims.leap) if label in sims else False,
+            ticks=ticks[label], wall_s=round(walls[label], 6),
             ticks_per_sec=round(tps, 1),
             speedup_vs_k1_ungated=round(speedup, 3)))
+    return rows
+
+
+def bench_leap_scenario(name, tree, wl, max_ticks, reps):
+    """Measure leap-on vs leap-off (superstep auto, jnp backend) on one
+    sparse scenario, interleaved best-of.  Returns one row per variant."""
+    variants, sims = {}, {}
+    for label, leap in (("leap_off", False), ("leap_on", True)):
+        sim = build(SimConfig(link=LINK, tree=tree, algo="smartt",
+                              leap=leap), wl)
+        sims[label] = sim
+        variants[label] = (lambda s=sim: s.run(max_ticks))
+
+    walls, ticks = _measure(variants, reps)
+    base_tps = ticks["leap_off"] / walls["leap_off"]
+    rows = []
+    for label in variants:
+        tps = ticks[label] / walls[label]
+        emit(f"perf_{name}_jnp_{label}", walls[label],
+             f"ticks={ticks[label]};ticks_per_sec={tps:.0f};"
+             f"speedup_vs_leap_off={tps / base_tps:.2f}")
+        rows.append(dict(
+            name=f"{name}/jnp/{label}", scenario=name, backend="jnp",
+            superstep=sims[label].dims.superstep,
+            leap=bool(sims[label].dims.leap),
+            ticks=ticks[label], wall_s=round(walls[label], 6),
+            ticks_per_sec=round(tps, 1),
+            speedup_vs_leap_off=round(tps / base_tps, 3)))
     return rows
 
 
@@ -155,6 +227,9 @@ def main(argv=None) -> None:
         for backend in backends:
             rows.extend(bench_scenario(name, tree, wl, max_ticks, backend,
                                        reps, args.quick))
+    for name, tree, wl, max_ticks in leap_scenarios(args.quick):
+        rows.extend(bench_leap_scenario(name, tree, wl, max_ticks,
+                                        min(reps, 2)))
     path = write_bench_json(
         "perf", rows, path=args.json_path,
         meta=dict(quick=bool(args.quick), reps=reps, jax=jax.__version__,

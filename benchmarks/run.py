@@ -6,14 +6,20 @@ exist (see repro.launch.dryrun).  With ``--json`` the rows are also
 recorded into the machine-readable ``BENCH_netsim.json`` ledger (section
 ``figs``) via ``benchmarks.common.write_bench_json``.
 
+``--quick`` is plumbed through to every netsim figure (sizes and tick
+budgets scaled down for smoke runs); quick rows land in the separate
+ledger section ``figs_quick`` so they never overwrite the full-size
+figures.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--json] [--json-path PATH]
-      [fig2 fig6 ...]
+      [--quick] [fig2 fig6 ...]
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import os
 import sys
 import time
@@ -36,6 +42,9 @@ def main(argv=None) -> None:
                    help="also record rows into BENCH_netsim.json")
     p.add_argument("--json-path", default=None, metavar="PATH",
                    help="ledger path (implies --json)")
+    p.add_argument("--quick", action="store_true",
+                   help="scaled-down smoke run (rows go to section "
+                        "'figs_quick', never the full-size 'figs')")
     args = p.parse_args(argv)
 
     t0 = time.time()
@@ -52,7 +61,9 @@ def main(argv=None) -> None:
         if not selected(fn):
             continue
         try:
-            rows.extend(fn())
+            kw = ({"quick": True} if args.quick
+                  and "quick" in inspect.signature(fn).parameters else {})
+            rows.extend(fn(**kw))
         except Exception as e:  # noqa: BLE001
             # keep the CSV row shape but never swallow the diagnosis
             traceback.print_exc(file=sys.stderr)
@@ -61,8 +72,8 @@ def main(argv=None) -> None:
 
     if args.json or args.json_path:
         from benchmarks.common import write_bench_json
-        write_bench_json("figs", _row_dicts(rows, errors),
-                         path=args.json_path)
+        write_bench_json("figs_quick" if args.quick else "figs",
+                         _row_dicts(rows, errors), path=args.json_path)
 
     # roofline table if the sweep artifacts exist
     here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

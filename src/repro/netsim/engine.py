@@ -12,9 +12,14 @@ The aggregate run loops execute in *supersteps* (DESIGN.md Sec. 6): a
 iteration, amortizing the while-loop round-trip (cond dispatch + carry
 handling) over K ticks; each fused tick is individually gated on the same
 exit condition (``lax.cond``), keeping every trajectory bit-for-bit
-identical to the K=1 loop.  All run-loop entry points donate the incoming
-``SimState`` buffers to XLA (callers must treat a state passed to a run
-loop as consumed).
+identical to the K=1 loop.  When ``Dims.leap`` holds, each superstep first
+applies an *event-horizon time leap* (DESIGN.md Sec. 6.3): a cheap
+reduction over the delay rings, armed timers, and admission predicates
+yields the distance to the next eventful tick, and ``now`` advances by it
+in O(1) — event-free ticks are state no-ops by construction, so the
+leap-on trajectory stays bit-for-bit equal to leap-off.  All run-loop
+entry points donate the incoming ``SimState`` buffers to XLA (callers
+must treat a state passed to a run loop as consumed).
 
 The six sub-steps of a tick live in dedicated phase modules, each a pure
 function ``(Dims, Consts, SimState) -> SimState``:
@@ -73,11 +78,16 @@ class Sim:
     consts: Consts
     step_fn: callable       # (Consts, SimState) -> SimState — sweepable form
     step: callable          # SimState -> SimState (consts bound)
+    horizon_fn: callable    # (Consts, SimState) -> i32 next-event distance
+    horizon: callable       # SimState -> i32 (consts bound)
     init: callable          # () -> SimState
 
+    def _leap_horizon(self):
+        return self.horizon if self.dims.leap else None
+
     def run(self, max_ticks: int) -> SimState:
-        return _run_until_done(self.step, self.init(), max_ticks,
-                               self.dims.superstep)
+        return _run_until_done(self.step, self._leap_horizon(), self.init(),
+                               max_ticks, self.dims.superstep)
 
     def run_trace(self, ticks: int, trace_flows: int = 8):
         return _run_trace(self.step, self.init(), ticks, trace_flows)
@@ -85,11 +95,22 @@ class Sim:
     def run_batch(self, seeds, max_ticks: int) -> SimState:
         """vmap a batch of decorrelated runs (per-seed RED/ECMP salts) —
         amortizes per-op dispatch on CPU and maps onto pjit batching for
-        parameter sweeps at scale."""
+        parameter sweeps at scale.
+
+        The init state is built once and broadcast over the batch —
+        only the per-seed ``salt`` is scattered (asserted by the
+        ``state.INIT_TRACE_COUNT`` check in tests/test_engine_leap.py);
+        each broadcast leaf is a fresh buffer, so donation stays legal.
+        """
         import numpy as _np
-        states = jax.vmap(lambda s: self.init()._replace(
-            salt=s.astype(I32)))(jnp.asarray(_np.asarray(seeds), I32))
-        return _run_batch(self.step, states, max_ticks, self.dims.superstep)
+        seeds = jnp.asarray(_np.asarray(seeds), I32)
+        base = self.init()
+        states = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (seeds.shape[0],) + x.shape),
+            base)
+        states = states._replace(salt=seeds)
+        return _run_batch(self.step, self._leap_horizon(), states, max_ticks,
+                          self.dims.superstep)
 
 
 # --------------------------------------------------------------------------
@@ -114,12 +135,23 @@ def build(cfg: SimConfig, wl: Workload) -> Sim:
     def step(st: SimState) -> SimState:
         return step_fn(consts, st)
 
+    def horizon_fn(consts: Consts, st: SimState):
+        """Distance (ticks) to the next eventful tick — min over the
+        per-phase next-event reductions (DESIGN.md Sec. 6.3)."""
+        h = fabric.horizon(dims, consts, st)
+        h = jnp.minimum(h, transport.horizon(dims, consts, st))
+        return jnp.minimum(h, sender.horizon(dims, consts, st))
+
+    def horizon(st: SimState):
+        return horizon_fn(consts, st)
+
     def init() -> SimState:
         return init_state(dims, consts)
 
     return Sim(cfg=cfg, topo=topo, timing=tm, wl=wl, cc_params=consts.cc,
                lb_params=consts.lb, dims=dims, consts=consts,
-               step_fn=step_fn, step=step, init=init)
+               step_fn=step_fn, step=step, horizon_fn=horizon_fn,
+               horizon=horizon, init=init)
 
 
 # --------------------------------------------------------------------------
@@ -143,35 +175,75 @@ def build(cfg: SimConfig, wl: Workload) -> Sim:
 # build a fresh ``init()`` per call).
 
 
-def _superstep_loop(step, cond, K):
-    """while(cond) { K x (cond ? step : id) } — cond reduced once per K.
+def _superstep_loop(step, cond, K, leap=None):
+    """while(cond) { leap?; K x (cond ? step : id) } — cond reduced once
+    per K.
 
     Every K (including 1) uses the same gated fori-in-while structure, so
     the tick graph is embedded — and therefore lowered by XLA — identically
     for every superstep size; only the trip count changes.  (Embedding the
     K=1 tick bare in the while body changes XLA's fusion/FMA-contraction
     decisions and perturbs f32 CC arithmetic by an ULP, which would break
-    the bit-for-bit equivalence contract across K.)"""
+    the bit-for-bit equivalence contract across K.)
+
+    ``leap``, when given, runs once per superstep before the fused ticks:
+    it advances ``now`` to the next event horizon in O(1) (DESIGN.md Sec.
+    6.3).  The leap lands *at or before* the next eventful tick and the
+    leap distance is clamped to the remaining tick budget, so the gated
+    ticks that follow execute exactly the eventful ticks (plus event-free
+    ticks, which are state no-ops) of the leap-free trajectory."""
     def tick(_, st):
         return jax.lax.cond(cond(st), step, lambda s: s, st)
 
     def body(st):
+        if leap is not None:
+            st = leap(st)
         return jax.lax.fori_loop(0, max(K, 1), tick, st)
 
     return lambda st: jax.lax.while_loop(cond, body, st)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))
-def _run_until_done(step, state0: SimState, max_ticks: int,
+def _leap(horizon, max_ticks):
+    """Single-run time leap: jump ``now`` to the next event horizon and
+    apply the closed-form Δ-tick accounting (``metrics.leap_account``).
+
+    Today's leap predicate only jumps with every queue empty, so the
+    occupancy integral provably contributes 0.0 — the general Δ * Σq form
+    is kept so a relaxed predicate (e.g. leaping a degraded link's idle
+    service periods with packets parked) inherits correct accounting."""
+    def leap(st):
+        d = jnp.minimum(horizon(st), max_ticks - st.now)
+        occ = jnp.sum(st.q_size[:-1])
+        return st._replace(now=st.now + d,
+                           m=metrics.leap_account(st.m, d, occ))
+    return leap
+
+
+def _leap_batched(vhorizon, max_ticks):
+    """Batched time leap: all lanes share ``now`` (the exit predicate
+    reads ``now[0]``), so the safe jump is the min horizon over the
+    batch — lanes with nearer events simply execute their eventful ticks,
+    lanes without execute state no-ops."""
+    def leap(st):
+        d = jnp.minimum(jnp.min(vhorizon(st)), max_ticks - st.now[0])
+        occ = jnp.sum(st.q_size[:, :-1], axis=1)
+        return st._replace(now=st.now + d,
+                           m=metrics.leap_account(st.m, d, occ))
+    return leap
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 3, 4), donate_argnums=(2,))
+def _run_until_done(step, horizon, state0: SimState, max_ticks: int,
                     superstep: int) -> SimState:
     def cond(st):
         return (st.now < max_ticks) & ~jnp.all(st.done)
 
-    return _superstep_loop(step, cond, superstep)(state0)
+    leap = _leap(horizon, max_ticks) if horizon is not None else None
+    return _superstep_loop(step, cond, superstep, leap)(state0)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))
-def _run_batch(step, states: SimState, max_ticks: int,
+@functools.partial(jax.jit, static_argnums=(0, 1, 3, 4), donate_argnums=(2,))
+def _run_batch(step, horizon, states: SimState, max_ticks: int,
                superstep: int) -> SimState:
     """Run a [B]-batched state bundle to completion (vmapped step)."""
     vstep = jax.vmap(step)
@@ -179,7 +251,9 @@ def _run_batch(step, states: SimState, max_ticks: int,
     def cond(st):
         return (st.now[0] < max_ticks) & ~jnp.all(st.done)
 
-    return _superstep_loop(vstep, cond, superstep)(states)
+    leap = (_leap_batched(jax.vmap(horizon), max_ticks)
+            if horizon is not None else None)
+    return _superstep_loop(vstep, cond, superstep, leap)(states)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))

@@ -9,6 +9,12 @@ Both are pure ``(Dims, Consts, SimState) -> SimState``; they communicate
 with the rest of the pipeline only through ``SimState`` fields (the wire
 ring ``infl``, the delayed control rings, and the receiver ledgers).
 Routing is purely functional over the per-emitter constants in ``Consts``.
+
+``horizon`` is the phases' next-event reduction for the engine's
+event-horizon time leaping (DESIGN.md Sec. 6.3): every delay ring keeps the
+invariant that a *valid* entry is a genuinely in-flight event (slots are
+zeroed when read), so "ticks until this phase next does work" is a cheap
+reduction over the live slots.
 """
 
 from __future__ import annotations
@@ -17,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.netsim import hashing
-from repro.netsim.state import Consts, Dims, SimState, pkt_size
+from repro.netsim.state import HORIZON_INF, Consts, Dims, SimState, pkt_size
 from repro.netsim.topology import KIND_T0_UP, KIND_T1_DOWN
 
 I32 = jnp.int32
@@ -100,10 +106,10 @@ def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
     CAP, L, R = dims.CAP, dims.L, dims.R
 
     arr = st.infl[t % L]                               # [NE, 7]
-    # no post-read zeroing needed: every emitter class blanket-rewrites its
-    # full row range of this slot (departures x2, sends) before the slot
-    # comes around again
-    infl = st.infl
+    # zero the slot once read: the wire ring then only ever holds live
+    # packets, which is what makes `horizon`'s occupied-slot reduction (and
+    # therefore time leaping over the skipped blanket rewrites) sound
+    infl = st.infl.at[t % L].set(0)
     a_valid = arr[:, 0] == 1
     a_dstq, a_flow, a_seq, a_ent, a_ecn, a_ts = (arr[:, i] for i in range(1, 7))
     enq = a_valid & (a_dstq >= 0)
@@ -160,9 +166,13 @@ def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
     row = jnp.where(acc, edst, NQ)
     posw = jnp.where(acc, pos, 0)
     # (indices are NOT unique: every non-accepted emitter collapses onto
-    # the write-off cell (NQ, 0), which is never read)
+    # the write-off cell (NQ, 0), which is never read — the payload is
+    # masked to zero there so the cell stays constant and an event-free
+    # tick leaves the whole array bitwise unchanged, the property time
+    # leaping relies on)
     q_fields = st.q_fields.at[row, posw].set(
-        jnp.stack([a_flow, a_seq, a_ent, a_ecn, a_ts], axis=1),
+        jnp.where(acc[:, None],
+                  jnp.stack([a_flow, a_seq, a_ent, a_ecn, a_ts], axis=1), 0),
         mode="promise_in_bounds")
     q_size = q_size + jax.ops.segment_sum(acc.astype(I32), edst,
                                           num_segments=NQ + 1)
@@ -202,3 +212,22 @@ def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
         ack_ring=ack_ring, q_fields=q_fields, q_size=q_size,
         trim_seen=trim_seen, trim_ring=trim_ring, m=m,
     )
+
+
+def horizon(dims: Dims, consts: Consts, st: SimState):
+    """Ticks until phases 1-2 next do work (DESIGN.md Sec. 6.3).
+
+    0 while any port holds a packet — an occupied port departs (or is
+    fault-serviced/blackholed) on a tick-by-tick schedule, so the fabric is
+    only leapable once every queue is drained.  Otherwise the next event is
+    the earliest occupied wire slot landing: ``arrivals`` reads slot
+    ``t % L``, so an entry parked in slot ``s`` lands in ``(s - t) mod L``
+    ticks (exact — the wire ring is zeroed on read, so valid entries are
+    exactly the packets in flight).
+    """
+    t = st.now
+    busy = jnp.any(st.q_size[:dims.NQ] > 0)
+    live = jnp.any(st.infl[:, :, 0] == 1, axis=1)                  # [L]
+    dist = (consts.iota_l - t) % dims.L
+    h_wire = jnp.min(jnp.where(live, dist, HORIZON_INF))
+    return jnp.where(busy, 0, h_wire)

@@ -64,6 +64,21 @@ def account(dims, consts, st):
     return st._replace(m=m)
 
 
+def leap_account(m: Metrics, dt, occupancy) -> Metrics:
+    """Closed-form ``dt``-tick occupancy integral for a time leap
+    (DESIGN.md Sec. 6.3): the linear form ``dt * occupancy`` replaces
+    ``dt`` sequential executions of ``account``.
+
+    Bitwise exact, not approximate: the leap predicate only yields
+    ``dt > 0`` with every port empty (an occupied port departs every
+    tick), so the integral contributes exactly 0.0 and ``q_max`` — the
+    running max of an unchanged occupancy — needs no update.  Broadcasts
+    over a leading batch axis (``occupancy`` per element, scalar ``dt``).
+    """
+    return m._replace(
+        q_sum=m.q_sum + dt.astype(F32) * occupancy.astype(F32))
+
+
 # --------------------------------------------------------------------------
 # result extraction
 # --------------------------------------------------------------------------

@@ -9,6 +9,10 @@
 
 Static branch selectors (credit_based / paced / lb_mode / window) come from
 ``Dims``; every numeric knob is traced through ``Consts``.
+
+``horizon`` reduces the same admission/demand predicates to "ticks until a
+NIC or a receiver next acts", feeding the engine's event-horizon time
+leaping (DESIGN.md Sec. 6.3).
 """
 
 from __future__ import annotations
@@ -17,10 +21,21 @@ import jax.numpy as jnp
 
 from repro.core import reps
 from repro.netsim.fabric import route_from_sender
-from repro.netsim.state import Consts, Dims, SimState
+from repro.netsim.state import HORIZON_INF, Consts, Dims, SimState
 
 I32 = jnp.int32
 F32 = jnp.float32
+
+
+def _grant_demand(dims: Dims, consts: Consts, st: SimState):
+    """Flows whose receiver owes pull credit (EQDS): outstanding credit
+    window above received + known-lost bytes — self-clocks, and re-grants
+    for trimmed packets (the receiver sees trimmed headers) so
+    retransmissions never starve."""
+    started_flows = (st.now >= consts.t_start) & ~st.done
+    return started_flows & (
+        st.granted - st.goodput.astype(F32) - st.trim_seen[:dims.NF]
+        < consts.credit_window)
 
 
 def grants(dims: Dims, consts: Consts, st: SimState) -> SimState:
@@ -31,13 +46,7 @@ def grants(dims: Dims, consts: Consts, st: SimState) -> SimState:
     NF, N, R, FRMAX = dims.NF, dims.N, dims.R, dims.FRMAX
     MTU = float(dims.mtu)
 
-    # outstanding credit window above received + known-lost bytes:
-    # self-clocks, and re-grants for trimmed packets (the receiver
-    # sees trimmed headers) so retransmissions never starve.
-    started_flows = (t >= consts.t_start) & ~st.done
-    demand = started_flows & (
-        st.granted - st.goodput.astype(F32) - st.trim_seen[:NF]
-        < consts.credit_window)
+    demand = _grant_demand(dims, consts, st)
     dm = jnp.pad(demand, (0, 1))[consts.flows_by_recv]          # [N, FR]
     keys = (jnp.arange(FRMAX, dtype=I32)[None, :] - st.rr_recv[:, None]) % FRMAX
     keys = jnp.where(dm, keys, FRMAX + 1)
@@ -54,19 +63,17 @@ def grants(dims: Dims, consts: Consts, st: SimState) -> SimState:
     return st._replace(credit_ring=credit_ring, granted=granted, rr_recv=rr_recv)
 
 
-def sends(dims: Dims, consts: Consts, st: SimState) -> SimState:
-    """Phase 5: one packet per NIC per tick, arbitration + admission."""
+def admission(dims: Dims, consts: Consts, st: SimState):
+    """Send admission for every flow at the current tick, *excluding* rate
+    pacing (the caller folds in the freshly accrued pacing budget; the
+    leap ``horizon`` runs only for unpaced configurations, where this IS
+    the full admission).  Returns ``(elig, has_retx, seq_emit, nsize)``.
+    """
     t = st.now
-    m = st.m
-    NF, N, NQ, L, W = dims.NF, dims.N, dims.NQ, dims.L, dims.W
-    FMAX, window = dims.FMAX, dims.window
+    NF, W, FMAX, window = dims.NF, dims.W, dims.FMAX, dims.window
     mtu_i = dims.mtu
     flow_ids = consts.flow_ids
     cc = st.cc
-
-    pace = st.pace_accum
-    if dims.paced:
-        pace = jnp.minimum(pace + cc.pacing_rate, 4.0 * float(mtu_i))
 
     started = (t >= consts.t_start) & ~st.done
     if window < FMAX:
@@ -95,8 +102,27 @@ def sends(dims: Dims, consts: Consts, st: SimState) -> SimState:
     credit_ok = True
     if dims.credit_based:
         credit_ok = (cc.credits >= nsize) | (cc.spec_budget >= nsize)
-    pace_ok = (pace >= nsize) if dims.paced else True
-    elig = started & (has_retx | new_ok) & win_ok & credit_ok & pace_ok & (nsize > 0)
+    elig = started & (has_retx | new_ok) & win_ok & credit_ok & (nsize > 0)
+    return elig, has_retx, seq_emit, nsize
+
+
+def sends(dims: Dims, consts: Consts, st: SimState) -> SimState:
+    """Phase 5: one packet per NIC per tick, arbitration + admission."""
+    t = st.now
+    m = st.m
+    NF, N, NQ, L, W = dims.NF, dims.N, dims.NQ, dims.L, dims.W
+    FMAX = dims.FMAX
+    mtu_i = dims.mtu
+    flow_ids = consts.flow_ids
+    cc = st.cc
+
+    pace = st.pace_accum
+    if dims.paced:
+        pace = jnp.minimum(pace + cc.pacing_rate, 4.0 * float(mtu_i))
+
+    elig, has_retx, seq_emit, nsize = admission(dims, consts, st)
+    if dims.paced:
+        elig &= pace >= nsize
 
     # per-sender round-robin arbitration (one packet per NIC per tick)
     if FMAX == 1:
@@ -137,11 +163,15 @@ def sends(dims: Dims, consts: Consts, st: SimState) -> SimState:
 
     # sent-ring bookkeeping: one packed scatter for state/seq/ts (the
     # component axis leads, so the three writes share their flow/slot
-    # indices; non-emitting flows land in the write-off row NF)
+    # indices; non-emitting flows land in the write-off row NF with a
+    # zeroed payload, so the row stays constant and an event-free tick
+    # leaves the ring bitwise unchanged — the property time leaping
+    # relies on)
     eslot = seq_emit % W
     eflow2 = jnp.where(emit_mask, flow_ids, NF)
-    upd = jnp.stack([jnp.ones((NF,), I32), seq_emit,
-                     jnp.broadcast_to(t, (NF,))])
+    upd = jnp.where(emit_mask[None, :],
+                    jnp.stack([jnp.ones((NF,), I32), seq_emit,
+                               jnp.broadcast_to(t, (NF,))]), 0)
     sent = st.sent.at[:, eflow2, eslot].set(upd, mode="promise_in_bounds")
     is_new_send = emit_mask & ~has_retx
     next_seq = st.next_seq + is_new_send.astype(I32)
@@ -161,3 +191,26 @@ def sends(dims: Dims, consts: Consts, st: SimState) -> SimState:
         infl=infl, sent=sent,
         next_seq=next_seq, rr_send=rr_send, pace_accum=pace, cc=cc, lb=lb, m=m,
     )
+
+
+def horizon(dims: Dims, consts: Consts, st: SimState):
+    """Ticks until phases 4-5 next do work (DESIGN.md Sec. 6.3).
+
+    0 while any flow passes send admission (its NIC emits this tick) or —
+    for credit-based algorithms — any receiver owes a grant: both
+    predicates are functions of state that only *eventful* ticks mutate,
+    so between events the only thing that can flip them is a flow-start
+    deadline, which bounds the leap.  Never traced for paced
+    configurations (``Dims.leap`` is forced off there — the pacing budget
+    accrues every tick).
+    """
+    t = st.now
+    elig, _, _, _ = admission(dims, consts, st)
+    h = jnp.where(jnp.any(elig), 0, HORIZON_INF)
+    if dims.credit_based:
+        h = jnp.minimum(
+            h, jnp.where(jnp.any(_grant_demand(dims, consts, st)),
+                         0, HORIZON_INF))
+    unstarted = t < consts.t_start
+    h_start = jnp.min(jnp.where(unstarted, consts.t_start - t, HORIZON_INF))
+    return jnp.minimum(h, h_start)

@@ -53,6 +53,11 @@ class SimConfig:
     lb: str = "reps"
     superstep: int = 0               # ticks fused per run-loop iteration;
                                      # 0 = auto (one base RTT), 1 = legacy
+    leap: bool = True                # event-horizon time leaping: skip
+                                     # quiescent ticks in closed form
+                                     # (DESIGN.md Sec. 6.3; auto-disabled
+                                     # for paced CC and PLB, whose state
+                                     # ages on event-free ticks)
     trimming: bool = True
     rto_mult: float = 0.0            # RTO = rto_mult * trtt; 0 = auto
                                      # (3.0 with trimming, 2.0 aggressive without)
@@ -99,6 +104,8 @@ class Dims(NamedTuple):
     brtt_inter: int  # base RTT ticks == BDP packets
     bdp_bytes: float
     superstep: int  # ticks per fused run-loop iteration (>= 1)
+    leap: bool      # event-horizon time leaping enabled (and exact: the
+                    # CC/LB choice mutates no state on event-free ticks)
     trimming: bool
     credit_based: bool
     paced: bool
@@ -151,6 +158,10 @@ class Consts(NamedTuple):
     lat_core: jnp.ndarray        # i32 scalar t0_up/t1_down wire latency
     lat_edge: jnp.ndarray        # i32 scalar t0_down wire latency
     lat_send: jnp.ndarray        # i32 scalar sender-NIC wire latency
+    # -- next-event horizon invariants (DESIGN.md Sec. 6.3): slot iotas of
+    #    the wire and control rings, hoisted for the leap reductions --
+    iota_l: jnp.ndarray          # i32 [L] wire-ring slot iota
+    iota_r: jnp.ndarray          # i32 [R] control-ring slot iota
 
 
 def pkt_size(dims: Dims, consts: Consts, flow, seq):
@@ -313,13 +324,21 @@ def derive(cfg: SimConfig, wl: Workload):
         raise ValueError(f"superstep must be >= 0, got {cfg.superstep}")
     superstep = int(cfg.superstep) or int(tm.brtt_inter)
 
+    # Event-horizon time leaping (DESIGN.md Sec. 6.3) is only exact when an
+    # event-free tick is a state no-op.  Rate pacing accrues a budget every
+    # tick and PLB rolls its round clock on wall time, so those two
+    # configurations run leap-free regardless of the knob.
+    paced = cfg.algo in registry.PACED
+    leap = bool(cfg.leap) and not paced and cfg.lb != "plb"
+
     dims = Dims(
         N=N, NQ=NQ, NE=NE, NF=NF, CAP=CAP, W=W, WW=WW, L=L, R=R,
         MAXW=MAXW, FMAX=FMAX, FRMAX=FRMAX, P=P, U=U, M=M, PU=P * U,
         window=window, mtu=int(MTU), brtt_inter=int(tm.brtt_inter),
-        bdp_bytes=bdp, superstep=superstep, trimming=cfg.trimming,
+        bdp_bytes=bdp, superstep=superstep, leap=leap,
+        trimming=cfg.trimming,
         credit_based=cfg.algo in registry.CREDIT_BASED,
-        paced=cfg.algo in registry.PACED,
+        paced=paced,
         lb_mode=reps.LB_NAMES[cfg.lb],
     )
     consts = Consts(
@@ -354,12 +373,25 @@ def derive(cfg: SimConfig, wl: Workload):
         lat_core=jnp.asarray(lat_q[0], I32),
         lat_edge=jnp.asarray(lat_q[2 * P * U], I32),
         lat_send=jnp.asarray(lat_q[NQ], I32),
+        iota_l=jnp.arange(L, dtype=I32),
+        iota_r=jnp.arange(R, dtype=I32),
     )
     return topo, tm, dims, consts
 
 
+# Incremented each time ``init_state`` runs (eagerly or as a trace).
+# ``tests/test_engine_leap.py`` asserts ``Sim.run_batch`` builds exactly one
+# init state and broadcasts it, rather than re-deriving it per seed.
+INIT_TRACE_COUNT = [0]
+
+# Sentinel "no event in sight" horizon (i32-safe; run loops clamp it to the
+# remaining tick budget before applying a leap).
+HORIZON_INF = 1 << 30
+
+
 def init_state(dims: Dims, consts: Consts) -> SimState:
     """Tick-0 world.  Pure in (dims, consts); safe under jit and vmap."""
+    INIT_TRACE_COUNT[0] += 1
     zeros = jnp.zeros
     NF, N, NQ = dims.NF, dims.N, dims.NQ
     cc = init_cc_state(NF, consts.cc, start_cwnd=consts.start_cwnd)

@@ -92,7 +92,8 @@ class Sweep:
     def run(self, max_ticks: int) -> state.SimState:
         """Run all points to completion; one step compilation total.
         The freshly built [B]-batched state is donated to the run loop."""
-        return _run_sweep(self.sim.step_fn, self.axes, max_ticks,
+        horizon_fn = self.sim.horizon_fn if self.sim.dims.leap else None
+        return _run_sweep(self.sim.step_fn, horizon_fn, self.axes, max_ticks,
                           self.sim.dims.superstep, self.consts_b, self.init())
 
     def summaries(self, states: state.SimState) -> list:
@@ -134,12 +135,16 @@ def build_sweep(cfg: state.SimConfig, wl,
                  consts_b=consts_b, axes=axes)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3), donate_argnums=(5,))
-def _run_sweep(step_fn, axes, max_ticks, superstep, consts_b, states):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4), donate_argnums=(6,))
+def _run_sweep(step_fn, horizon_fn, axes, max_ticks, superstep, consts_b,
+               states):
     """Superstep-fused sweep loop: the all-done exit reduction (over flows
     *and* grid points) runs once per ``superstep`` ticks; each fused tick
     is gated on the same scalar predicate so trajectories stay bit-for-bit
-    identical to the per-tick loop (engine.py run-loop contract)."""
+    identical to the per-tick loop (engine.py run-loop contract).  With
+    ``horizon_fn`` the loop also time-leaps by the min next-event distance
+    over the grid (each point's horizon is computed under its own swept
+    ``Consts``), per the engine's batched-leap contract."""
     vstep = jax.vmap(step_fn, in_axes=(axes, 0))
 
     def cond(st):
@@ -148,7 +153,12 @@ def _run_sweep(step_fn, axes, max_ticks, superstep, consts_b, states):
     def body(st):
         return vstep(consts_b, st)
 
-    return engine._superstep_loop(body, cond, superstep)(states)
+    leap = None
+    if horizon_fn is not None:
+        vhorizon = jax.vmap(horizon_fn, in_axes=(axes, 0))
+        leap = engine._leap_batched(lambda st: vhorizon(consts_b, st),
+                                    max_ticks)
+    return engine._superstep_loop(body, cond, superstep, leap)(states)
 
 
 def summarize_batch(sim: engine.Sim, states: state.SimState) -> list:

@@ -5,6 +5,10 @@ notifications, loss bitmaps, EQDS credit grants), frees/loses sent-ring
 slots, fires retransmission timeouts, and hands the per-flow event bundle
 to the congestion-control update (any registry backend: pure-jnp or the
 Pallas ``cc_update`` kernel) and the load-balancer ACK path.
+
+``horizon`` reduces the same rings — plus the armed retransmission
+timers — to "ticks until this phase next does work", feeding the engine's
+event-horizon time leaping (DESIGN.md Sec. 6.3).
 """
 
 from __future__ import annotations
@@ -14,7 +18,7 @@ import jax.numpy as jnp
 from repro.core import reps
 from repro.core.types import CCEvent
 from repro.netsim.metrics import HIST_BINS
-from repro.netsim.state import Consts, Dims, SimState, pkt_size
+from repro.netsim.state import HORIZON_INF, Consts, Dims, SimState, pkt_size
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -30,9 +34,11 @@ def control(dims: Dims, consts: Consts, cc_update, st: SimState) -> SimState:
     flow_ids = consts.flow_ids
 
     acks = st.ack_ring[t % R]                          # [N, 6]
-    # no post-read zeroing needed: arrivals blanket-rewrites the whole
-    # [N]-row slot (t+ret) % R every tick before it is read again
-    ack_ring = st.ack_ring
+    # zero the slot once read (the trim/credit rings below already do):
+    # valid ACK-ring entries are then exactly the ACKs in flight, which is
+    # what makes `horizon`'s occupied-slot reduction — and time leaping
+    # over the skipped blanket rewrites — sound
+    ack_ring = st.ack_ring.at[t % R].set(0)
     v = acks[:, 0] == 1
     idxf = jnp.where(v, acks[:, 1], NF)
 
@@ -120,3 +126,32 @@ def control(dims: Dims, consts: Consts, cc_update, st: SimState) -> SimState:
         ack_ring=ack_ring, trim_ring=trim_ring, credit_ring=credit_ring,
         sent=sent, unacked=unacked, cc=cc, lb=lb, m=m,
     )
+
+
+def horizon(dims: Dims, consts: Consts, st: SimState):
+    """Ticks until phase 3 next does work (DESIGN.md Sec. 6.3).
+
+    Three delayed control rings read slot ``t % R`` and are zeroed on
+    read, so a live entry in slot ``s`` is consumed in ``(s - t) mod R``
+    ticks.  An armed timeout (outstanding sent-ring slot of a started,
+    unfinished flow) fires at the first integer tick strictly beyond
+    ``send_tick + rto`` — ``floor(rto) + 1`` ticks after the send — which
+    the leap must land on exactly, not skip past.
+    """
+    t = st.now
+    NF, R = dims.NF, dims.R
+    dist = (consts.iota_r - t) % R
+    live_ack = jnp.any(st.ack_ring[:, :, 0] == 1, axis=1)          # [R]
+    h = jnp.min(jnp.where(live_ack, dist, HORIZON_INF))
+    if dims.trimming:
+        live_trim = jnp.any(st.trim_ring[:, :NF, 0] > 0, axis=1)
+        h = jnp.minimum(h, jnp.min(jnp.where(live_trim, dist, HORIZON_INF)))
+    if dims.credit_based:
+        live_cred = jnp.any(st.credit_ring[:, :NF] != 0.0, axis=1)
+        h = jnp.minimum(h, jnp.min(jnp.where(live_cred, dist, HORIZON_INF)))
+    started = (t >= consts.t_start) & ~st.done
+    armed = (st.sent[0, :NF] == 1) & started[:, None]               # [NF, W]
+    fire = (st.sent[2, :NF] + jnp.floor(consts.rto).astype(I32)[:, None]
+            + 1 - t)
+    h_to = jnp.min(jnp.where(armed, jnp.maximum(fire, 0), HORIZON_INF))
+    return jnp.minimum(h, h_to)

@@ -1,6 +1,10 @@
 """Traffic patterns from the paper's evaluation (Sec. 4): incast,
 permutation (including multi-permutation and uneven-size variants), and
-windowed alltoall.
+windowed alltoall — plus the sparse large-message patterns
+(``heavy_tailed``, ``staggered_large``) that exercise the engine's
+event-horizon time leaping (DESIGN.md Sec. 6.3): heavy-tailed message
+sizes and spread-out arrivals keep the fabric quiescent for most of the
+simulated span.
 
 A workload is a static flow table.  ``window`` implements the paper's
 windowed alltoall (Sec. 4.5): a sender's flow with per-sender order index j
@@ -89,6 +93,70 @@ def permutation(tree: FatTreeConfig, size_bytes: int, seed: int = 0,
         size=size,
         t_start=np.zeros_like(src),
         order=np.concatenate(orders).astype(np.int32),
+    )
+
+
+def heavy_tailed(tree: FatTreeConfig, n_flows: int, *,
+                 size_base: int = 16 * 1024, alpha: float = 1.3,
+                 size_cap: int = 2 * 1024 * 1024,
+                 gap_mean: float = 4000.0, seed: int = 0) -> Workload:
+    """Sparse arrivals with Pareto(``alpha``)-tailed message sizes.
+
+    Flow ``i`` starts after an Exp(``gap_mean``)-distributed gap beyond
+    flow ``i-1``'s start and moves ``size_base * Pareto`` bytes (capped at
+    ``size_cap``) between a random src/dst pair — mostly short messages
+    with a heavy tail of multi-BDP ones, separated by idle stretches of
+    many base RTTs.  The time-stepped engine burns a tick per MTU-time
+    across those stretches; the leap-enabled engine skips them in closed
+    form, which is exactly what `benchmarks/perf.py` measures on this
+    pattern (UEC-style sparse/large-message regimes, arXiv 2508.08906).
+    """
+    n = tree.n_nodes
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, n_flows)
+    dst = rng.integers(0, n - 1, n_flows)
+    dst += (dst >= src).astype(dst.dtype)          # uniform over dst != src
+    size = np.minimum(size_base * (1.0 + rng.pareto(alpha, n_flows)),
+                      size_cap).astype(np.int64)
+    t_start = np.floor(np.cumsum(rng.exponential(gap_mean, n_flows))
+                       ).astype(np.int64)
+    t_start -= t_start[0]                          # first flow starts at 0
+    return Workload(
+        name=f"heavy_tailed_{n_flows}f",
+        src=src.astype(np.int32),
+        dst=dst.astype(np.int32),
+        size=np.maximum(size, 1).astype(np.int32),
+        t_start=t_start.astype(np.int32),
+        order=np.zeros(n_flows, np.int32),
+    )
+
+
+def staggered_large(tree: FatTreeConfig, n_flows: int, size_bytes: int,
+                    gap_ticks: int, seed: int = 0) -> Workload:
+    """Few large messages, launched one every ``gap_ticks``.
+
+    Every flow has its own sender and its own receiver (a node may still
+    send one flow while receiving another), and every pair is cross-rack;
+    with ``gap_ticks`` well above the per-message service time the fabric
+    is idle between transfers — the timeout/large-message regime the leap
+    engine targets."""
+    n, m = tree.n_nodes, tree.nodes_per_rack
+    if n_flows > n // 2:
+        raise ValueError("staggered_large wants at most n_nodes/2 flows "
+                         "(one sender and one receiver per flow)")
+    rng = np.random.default_rng(seed)
+    # pair node i with a node shifted one rack over; distinct flows use
+    # distinct senders (FMAX stays 1) and distinct receivers
+    perm = rng.permutation(n)
+    src = perm[:n_flows]
+    dst = (src + m) % n
+    return Workload(
+        name=f"staggered_{n_flows}x{size_bytes // 1024}K",
+        src=src.astype(np.int32),
+        dst=dst.astype(np.int32),
+        size=np.full(n_flows, size_bytes, np.int32),
+        t_start=(gap_ticks * np.arange(n_flows)).astype(np.int32),
+        order=np.zeros(n_flows, np.int32),
     )
 
 

@@ -1,0 +1,176 @@
+"""Event-horizon time leaping (DESIGN.md Sec. 6.3): leap-on trajectories
+must be bit-for-bit identical to leap-off across the *full* state pytree
+(`now`, metrics counters, RTT histograms included) — the leap skips only
+ticks that are state no-ops, it never approximates.  Covered regimes:
+dense incast/permutation/alltoall on both CC backends, credit-based
+grants, timeout recovery without trimming, faulted links, the sparse
+heavy-tailed scenario the perf benchmark leans on, and the batched /
+sweep run loops with their min-over-batch leap."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.netsim import state, workloads
+from repro.netsim.engine import SimConfig, build
+from repro.netsim.sweep import build_sweep
+from repro.netsim.units import FatTreeConfig, LinkConfig
+
+TREE = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=2)
+OVERSUB = FatTreeConfig(racks=2, nodes_per_rack=8, uplinks=2)   # 4:1
+LINK = LinkConfig()
+
+
+def _run(tree, wl, leap, max_ticks=30000, **kw):
+    sim = build(SimConfig(link=LINK, tree=tree, leap=leap, **kw), wl)
+    st = sim.run(max_ticks=max_ticks)
+    st.now.block_until_ready()
+    return sim, st
+
+
+def _assert_state_equal(st_a, st_b):
+    la, lb = jax.tree.leaves(st_a), jax.tree.leaves(st_b)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _assert_leap_equal(tree, wl, max_ticks=30000, **kw):
+    _, st_off = _run(tree, wl, leap=False, max_ticks=max_ticks, **kw)
+    _, st_on = _run(tree, wl, leap=True, max_ticks=max_ticks, **kw)
+    _assert_state_equal(st_off, st_on)
+    return st_on
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_leap_bit_for_bit_incast(backend):
+    wl = workloads.incast(TREE, degree=3, size_bytes=16 * 4096, seed=0)
+    _assert_leap_equal(TREE, wl, cc_backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_leap_bit_for_bit_oversubscribed_permutation(backend):
+    """Trims, retransmissions, RED marking — the congested regime where a
+    wrong horizon would skip a deliverable event."""
+    wl = workloads.permutation(OVERSUB, size_bytes=64 * 4096, seed=1)
+    st = _assert_leap_equal(OVERSUB, wl, cc_backend=backend)
+    assert int(st.m.n_trim) > 0
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_leap_bit_for_bit_windowed_alltoall(backend):
+    wl = workloads.alltoall(TREE, size_bytes=8 * 4096, window=2, nodes=6)
+    _assert_leap_equal(TREE, wl, max_ticks=60000, cc_backend=backend)
+
+
+def test_leap_bit_for_bit_sparse_heavy_tailed():
+    """The perf target: spread-out arrivals with heavy-tailed sizes keep
+    the fabric quiescent most of the span — exactly where the leap engine
+    must skip thousands of ticks and still land on every event."""
+    wl = workloads.heavy_tailed(TREE, 10, size_base=2 * 4096,
+                                size_cap=64 * 4096, gap_mean=1200.0, seed=2)
+    st = _assert_leap_equal(TREE, wl, max_ticks=40000)
+    assert int(st.now) > 5000          # the span really is sparse
+
+
+def test_leap_lands_on_timeouts():
+    """Without trimming, recovery is timeout-driven: the leap must land
+    exactly on each RTO expiry (first tick strictly beyond send + rto)."""
+    wl = workloads.incast(OVERSUB, degree=6, size_bytes=32 * 4096, seed=3)
+    st = _assert_leap_equal(OVERSUB, wl, trimming=False)
+    assert int(st.m.n_to) > 0          # timeouts actually fired
+
+
+def test_leap_with_dead_link_timeout_cycles():
+    """A blackholed uplink forces RTO -> retransmit cycles with long
+    quiescent waits in between — the timeout-dominated leap regime."""
+    wl = workloads.permutation(OVERSUB, size_bytes=64 * 4096, seed=4)
+    st = _assert_leap_equal(OVERSUB, wl, faults=((0, 1, 0),),
+                            fault_start=100)
+    assert int(st.m.n_black) > 0 and int(st.m.n_to) > 0
+
+
+def test_leap_with_degraded_link_service_periods():
+    """A half-rate link services its queue every other tick; the horizon
+    treats any occupied port as eventful, so the leap must stay exact."""
+    wl = workloads.permutation(OVERSUB, size_bytes=64 * 4096, seed=5)
+    _assert_leap_equal(OVERSUB, wl, faults=((0, 1, 2),), fault_start=0)
+
+
+def test_leap_bit_for_bit_eqds_grants():
+    """Credit-based algorithms add the grant-demand and credit-ring
+    horizons; sparse starts make the receiver pacing the only clock."""
+    wl = workloads.heavy_tailed(TREE, 8, size_base=4 * 4096,
+                                size_cap=32 * 4096, gap_mean=800.0, seed=6)
+    _assert_leap_equal(TREE, wl, algo="eqds", max_ticks=40000)
+    _assert_leap_equal(TREE, wl, algo="eqds_smartt", max_ticks=40000)
+
+
+@pytest.mark.parametrize("algo", ["swift", "mprdma", "ecn_only",
+                                  "delay_only"])
+def test_leap_bit_for_bit_baseline_algorithms(algo):
+    """Dims.leap's contract — the CC choice mutates no state on event-free
+    ticks — is per-algorithm: every non-paced baseline the figure suite
+    runs leap-on must stay bitwise equal, so a future time-dependent term
+    added to one of them fails here instead of silently skewing figures."""
+    wl = workloads.heavy_tailed(TREE, 6, size_base=2 * 4096,
+                                size_cap=32 * 4096, gap_mean=600.0, seed=8)
+    _assert_leap_equal(TREE, wl, algo=algo, max_ticks=20000)
+
+
+@pytest.mark.parametrize("lb", ["spray", "ecmp"])
+def test_leap_bit_for_bit_other_load_balancers(lb):
+    """Same contract for the LB hooks that keep leaping enabled (PLB is
+    excluded statically; REPS is covered by every other test here)."""
+    wl = workloads.heavy_tailed(TREE, 6, size_base=2 * 4096,
+                                size_cap=32 * 4096, gap_mean=600.0, seed=9)
+    _assert_leap_equal(TREE, wl, lb=lb, max_ticks=20000)
+
+
+def test_leap_forced_off_for_paced_and_plb():
+    """Rate pacing accrues budget every tick and PLB rolls its round clock
+    on wall time — event-free ticks are not no-ops there, so the leap must
+    be statically disabled no matter the knob."""
+    wl = workloads.incast(TREE, degree=3, size_bytes=16 * 4096, seed=0)
+    assert not build(SimConfig(link=LINK, tree=TREE, algo="bbr",
+                               leap=True), wl).dims.leap
+    assert not build(SimConfig(link=LINK, tree=TREE, lb="plb",
+                               leap=True), wl).dims.leap
+    assert build(SimConfig(link=LINK, tree=TREE, leap=True), wl).dims.leap
+
+
+def test_leap_run_batch_min_over_batch():
+    """Batched lanes share `now`, so the loop leaps by the min horizon
+    over the batch; every lane must still match its leap-off twin."""
+    wl = workloads.heavy_tailed(OVERSUB, 8, size_base=4 * 4096,
+                                size_cap=64 * 4096, gap_mean=900.0, seed=7)
+    sim_on = build(SimConfig(link=LINK, tree=OVERSUB, leap=True), wl)
+    sim_off = build(SimConfig(link=LINK, tree=OVERSUB, leap=False), wl)
+    st_on = sim_on.run_batch(np.arange(4), max_ticks=40000)
+    st_off = sim_off.run_batch(np.arange(4), max_ticks=40000)
+    _assert_state_equal(st_off, st_on)
+
+
+def test_run_batch_builds_one_init_and_broadcasts():
+    """Satellite contract: run_batch derives a single init state and
+    broadcasts it over the batch, scattering only the per-seed salt."""
+    wl = workloads.incast(TREE, degree=3, size_bytes=16 * 4096, seed=0)
+    sim = build(SimConfig(link=LINK, tree=TREE), wl)
+    before = state.INIT_TRACE_COUNT[0]
+    st = sim.run_batch(np.arange(5), max_ticks=30000)
+    st.now.block_until_ready()
+    assert state.INIT_TRACE_COUNT[0] - before == 1
+    np.testing.assert_array_equal(np.asarray(st.salt), np.arange(5))
+
+
+def test_leap_sweep_per_point_horizons():
+    """The sweep leap evaluates each grid point's horizon under its own
+    swept Consts (different RTOs / start windows!) and jumps by the min."""
+    wl = workloads.incast(TREE, degree=4, size_bytes=32 * 4096, seed=1)
+    points = [{"start_cwnd_mult": a, "rto_mult": r}
+              for a, r in ((0.5, 3.0), (1.25, 5.0))]
+    st_on = build_sweep(SimConfig(link=LINK, tree=TREE, leap=True),
+                        wl, points).run(max_ticks=30000)
+    st_off = build_sweep(SimConfig(link=LINK, tree=TREE, leap=False),
+                         wl, points).run(max_ticks=30000)
+    _assert_state_equal(st_off, st_on)

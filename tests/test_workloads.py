@@ -1,0 +1,140 @@
+"""Workload generators: alltoall pair coverage and engine-level window
+semantics, permutation derangement properties, and the sparse/heavy-tailed
+generators feeding the leap benchmarks."""
+
+import numpy as np
+import pytest
+
+from repro.netsim import workloads
+from repro.netsim.engine import SimConfig, build
+from repro.netsim.units import FatTreeConfig, LinkConfig
+
+SMALL = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=4)
+LINK = LinkConfig()
+
+
+# ---------------------------------------------------------------- alltoall
+
+
+def test_alltoall_covers_all_pairs_once():
+    n = 6
+    wl = workloads.alltoall(SMALL, size_bytes=4 * 4096, window=3, nodes=n)
+    pairs = set(zip(wl.src.tolist(), wl.dst.tolist()))
+    assert len(pairs) == wl.n_flows == n * (n - 1)
+    assert pairs == {(s, d) for s in range(n) for d in range(n) if s != d}
+    # per-source order is the 0..n-2 schedule the window gate keys on
+    for s in range(n):
+        assert sorted(wl.order[wl.src == s].tolist()) == list(range(n - 1))
+    assert wl.window == 3
+
+
+def test_alltoall_window_limits_concurrency():
+    """Engine-level window semantics: with window=w, at most w flows of a
+    source are in progress (delivered some but not all bytes) at any tick,
+    and a flow's successors only start as predecessors finish; yet all
+    pairs are eventually issued and complete."""
+    n, w, pkts = 6, 2, 4
+    size = pkts * 4096
+    wl = workloads.alltoall(SMALL, size_bytes=size, window=w, nodes=n)
+    sim = build(SimConfig(link=LINK, tree=SMALL), wl)
+    nsrc0 = n - 1                           # flows 0..n-2 belong to source 0
+    ticks = 4000
+    _, ys = sim.run_trace(ticks, trace_flows=nsrc0)
+    g = np.asarray(ys["goodput"])           # [ticks, n-1], source 0's flows
+    assert g[-1].min() == size              # all of source 0's pairs issued
+
+    in_progress = (g > 0) & (g < size)
+    assert in_progress.sum(axis=1).max() <= w
+
+    # order-w flow must not deliver before some predecessor finished
+    first_byte = np.argmax(g > 0, axis=0)          # first tick with data
+    done_tick = np.argmax(g >= size, axis=0)
+    assert first_byte[w] > min(done_tick[:w])
+
+    # full run completes every pair
+    st = sim.run(max_ticks=200000)
+    assert bool(np.asarray(st.done).all())
+    np.testing.assert_array_equal(np.asarray(st.goodput), wl.size)
+
+
+def test_alltoall_window_one_serializes_each_source():
+    """window=1 degenerates to one flow at a time per source: completion
+    times are strictly ordered by the per-source schedule."""
+    n = 5
+    wl = workloads.alltoall(SMALL, size_bytes=2 * 4096, window=1, nodes=n)
+    sim = build(SimConfig(link=LINK, tree=SMALL), wl)
+    st = sim.run(max_ticks=200000)
+    assert bool(np.asarray(st.done).all())
+    fct = np.asarray(st.fct) + wl.t_start
+    for s in range(n):
+        mask = wl.src == s
+        by_order = fct[mask][np.argsort(wl.order[mask], kind="stable")]
+        assert np.all(np.diff(by_order) > 0), (s, by_order)
+
+
+# ------------------------------------------------------------- permutation
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_permutation_is_derangement(seed):
+    wl = workloads.permutation(SMALL, size_bytes=4 * 4096, seed=seed,
+                               cross_rack=False)
+    assert sorted(wl.dst.tolist()) == list(range(SMALL.n_nodes))
+    assert np.all(wl.dst != wl.src)
+
+
+@pytest.mark.parametrize("seed", [0, 5, 9])
+def test_cross_rack_permutation_crosses_the_core(seed):
+    m = SMALL.nodes_per_rack
+    wl = workloads.permutation(SMALL, size_bytes=4 * 4096, seed=seed,
+                               cross_rack=True)
+    assert np.all(wl.dst // m != wl.src // m)
+    assert sorted(wl.dst.tolist()) == list(range(SMALL.n_nodes))
+
+
+def test_multi_permutation_stacks_independent_rounds():
+    wl = workloads.permutation(SMALL, size_bytes=4 * 4096, seed=1, n_perms=3)
+    n = SMALL.n_nodes
+    assert wl.n_flows == 3 * n
+    for p in range(3):
+        sl = slice(p * n, (p + 1) * n)
+        assert np.all(wl.dst[sl] != wl.src[sl])
+        assert np.all(wl.order[sl] == p)
+
+
+# ------------------------------------------------ sparse / heavy-tailed
+
+
+def test_heavy_tailed_shape_and_sparsity():
+    wl = workloads.heavy_tailed(SMALL, 64, size_base=16 * 1024,
+                                size_cap=512 * 1024, gap_mean=500.0, seed=0)
+    assert np.all(wl.src != wl.dst)
+    assert np.all((wl.src >= 0) & (wl.src < SMALL.n_nodes))
+    assert np.all((wl.size >= 1) & (wl.size <= 512 * 1024))
+    assert wl.size.max() > 4 * wl.size.min()       # the tail is heavy
+    assert wl.t_start[0] == 0
+    assert np.all(np.diff(wl.t_start) >= 0)        # arrivals in time order
+    # sparse: mean inter-arrival near the requested gap (law of large nums)
+    mean_gap = float(wl.t_start[-1]) / (wl.n_flows - 1)
+    assert 250.0 < mean_gap < 1000.0
+
+
+def test_heavy_tailed_seed_reproducible():
+    a = workloads.heavy_tailed(SMALL, 16, seed=7)
+    b = workloads.heavy_tailed(SMALL, 16, seed=7)
+    c = workloads.heavy_tailed(SMALL, 16, seed=8)
+    np.testing.assert_array_equal(a.size, b.size)
+    np.testing.assert_array_equal(a.t_start, b.t_start)
+    assert not np.array_equal(a.size, c.size)
+
+
+def test_staggered_large_disjoint_and_spaced():
+    wl = workloads.staggered_large(SMALL, 4, 64 * 4096, gap_ticks=1000,
+                                   seed=0)
+    assert len(set(wl.src.tolist())) == 4          # distinct senders
+    assert np.all(wl.src != wl.dst)
+    m = SMALL.nodes_per_rack
+    assert np.all(wl.dst // m != wl.src // m)      # cross-rack transfers
+    np.testing.assert_array_equal(wl.t_start, 1000 * np.arange(4))
+    with pytest.raises(ValueError):
+        workloads.staggered_large(SMALL, SMALL.n_nodes, 4096, 10)
