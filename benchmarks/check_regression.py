@@ -1,18 +1,29 @@
-"""Compare a freshly measured perf section against the committed
-``BENCH_netsim.json`` ledger and *warn* on ticks/sec regressions.
+"""Compare a freshly measured benchmark section against the committed
+``BENCH_netsim.json`` ledger and *warn* on metric regressions.
 
 CI's bench smoke job runs ``benchmarks.perf --quick`` into a scratch path
 and then::
 
   python -m benchmarks.check_regression --fresh fresh.json \
       --ledger BENCH_netsim.json [--threshold 0.30] [--section perf]
+      [--metric ticks_per_sec] [--direction up]
 
-Rows are matched by ``name``; only rows carrying ``ticks_per_sec`` in both
-documents are compared.  A fresh row more than ``threshold`` below the
-ledger prints a GitHub ``::warning::`` annotation (and a plain line for
-local runs).  Exit code stays 0 — machine-speed drift on shared CI runners
-makes a hard gate flakier than it is useful; the ledger itself is the
-reviewed artifact.
+Rows are matched by ``name``; only rows carrying ``--metric`` as a number
+in both documents are compared.  The default reads the engine-throughput
+rows (``perf`` / ``ticks_per_sec``, higher is better); the experiment
+API's ``StudyResult`` rows (section ``studies`` — ``benchmarks.sweep
+--json`` / ``benchmarks.run --studies``) compare the same way, e.g.::
+
+  python -m benchmarks.check_regression --fresh fresh.json \
+      --ledger BENCH_netsim.json --section studies \
+      --metric completion --direction down
+
+A fresh row more than ``threshold`` worse than the ledger (below it for
+``--direction up`` metrics like ticks/sec, above it for ``--direction
+down`` metrics like completion ticks) prints a GitHub ``::warning::``
+annotation (and a plain line for local runs).  Exit code stays 0 —
+machine-speed drift on shared CI runners makes a hard gate flakier than
+it is useful; the ledger itself is the reviewed artifact.
 """
 
 from __future__ import annotations
@@ -22,24 +33,38 @@ import json
 import sys
 
 
-def load_rows(path: str, section: str) -> dict:
+def load_rows(path: str, section: str, metric: str = "ticks_per_sec") -> dict:
     with open(path) as f:
         doc = json.load(f)
     rows = doc.get("sections", {}).get(section, {}).get("rows", [])
     return {r["name"]: r for r in rows
             if isinstance(r, dict) and "name" in r
-            and isinstance(r.get("ticks_per_sec"), (int, float))}
+            and isinstance(r.get(metric), (int, float))
+            and not isinstance(r.get(metric), bool)}
 
 
-def compare(fresh: dict, ledger: dict, threshold: float):
-    """Yields (name, fresh_tps, ledger_tps, ratio) for regressed rows."""
+def compare(fresh: dict, ledger: dict, threshold: float,
+            metric: str = "ticks_per_sec", direction: str = "up"):
+    """Yields (name, fresh_value, ledger_value, ratio) for regressed rows.
+    ``direction`` is which way the metric is *good*: ``up`` warns when the
+    fresh value drops below ``(1 - threshold) * ledger``; ``down`` warns
+    when it rises above ``(1 + threshold) * ledger``."""
     for name, row in sorted(fresh.items()):
         base = ledger.get(name)
         if base is None:
             continue
-        f_tps, l_tps = row["ticks_per_sec"], base["ticks_per_sec"]
-        if l_tps > 0 and f_tps < (1.0 - threshold) * l_tps:
-            yield name, f_tps, l_tps, f_tps / l_tps
+        f_v, l_v = row[metric], base[metric]
+        if l_v <= 0:
+            continue
+        if direction == "up":
+            bad = f_v < (1.0 - threshold) * l_v
+        else:
+            # a negative fresh value is the unfinished sentinel (e.g.
+            # completion=-1: the run no longer finishes) — the worst
+            # possible regression, never a pass
+            bad = f_v > (1.0 + threshold) * l_v or f_v < 0
+        if bad:
+            yield name, f_v, l_v, f_v / l_v
 
 
 def main(argv=None) -> int:
@@ -47,25 +72,34 @@ def main(argv=None) -> int:
     p.add_argument("--fresh", required=True, help="freshly measured ledger")
     p.add_argument("--ledger", required=True, help="committed ledger")
     p.add_argument("--section", default="perf")
+    p.add_argument("--metric", default="ticks_per_sec",
+                   help="numeric row field to compare (default "
+                        "ticks_per_sec; StudyResult rows also carry "
+                        "completion, fct_p99, slowdown_p99, trims, ...)")
+    p.add_argument("--direction", choices=("up", "down"), default="up",
+                   help="which way the metric is good (default up: warn "
+                        "on drops; use down for completion/FCT metrics)")
     p.add_argument("--threshold", type=float, default=0.30,
-                   help="warn when fresh ticks/sec drops more than this "
-                        "fraction below the ledger (default 0.30)")
+                   help="warn when the fresh metric is more than this "
+                        "fraction worse than the ledger (default 0.30)")
     args = p.parse_args(argv)
 
-    fresh = load_rows(args.fresh, args.section)
-    ledger = load_rows(args.ledger, args.section)
+    fresh = load_rows(args.fresh, args.section, args.metric)
+    ledger = load_rows(args.ledger, args.section, args.metric)
     common = sorted(set(fresh) & set(ledger))
     print(f"# comparing {len(common)} row(s) "
           f"({len(fresh)} fresh, {len(ledger)} in ledger), "
+          f"section {args.section!r} metric {args.metric!r} "
           f"threshold {args.threshold:.0%}")
     for name in common:
-        print(f"#   {name}: {fresh[name]['ticks_per_sec']:.0f} vs "
-              f"{ledger[name]['ticks_per_sec']:.0f} ticks/sec")
+        print(f"#   {name}: {fresh[name][args.metric]:g} vs "
+              f"{ledger[name][args.metric]:g} {args.metric}")
 
-    regressions = list(compare(fresh, ledger, args.threshold))
-    for name, f_tps, l_tps, ratio in regressions:
-        msg = (f"perf regression {name}: {f_tps:.0f} ticks/sec vs "
-               f"{l_tps:.0f} in the ledger ({ratio:.2f}x)")
+    regressions = list(compare(fresh, ledger, args.threshold,
+                               args.metric, args.direction))
+    for name, f_v, l_v, ratio in regressions:
+        msg = (f"bench regression {name}: {f_v:g} {args.metric} vs "
+               f"{l_v:g} in the ledger ({ratio:.2f}x)")
         print(f"::warning title=bench regression::{msg}")
         print(msg, file=sys.stderr)
     if not regressions:

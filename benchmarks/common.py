@@ -13,38 +13,26 @@ import os
 import platform
 import time
 
-import numpy as np
-
-from repro.netsim.engine import SimConfig, build, jain_fairness, summarize
-from repro.netsim.units import FatTreeConfig, LinkConfig
-
-LINK = LinkConfig()
+from repro.netsim import api
+from repro.netsim.scenarios import (LINK,  # noqa: F401 (re-export)
+                                    TREE_2TO1, TREE_4TO1, TREE_8TO1,
+                                    TREE_FLAT, TREE_TINY, Scenario)
+from repro.netsim.state import SimConfig
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_netsim.json")
 
-# standard scaled topologies
-TREE_8TO1 = FatTreeConfig(racks=8, nodes_per_rack=16, uplinks=2)     # 128 nodes
-TREE_4TO1 = FatTreeConfig(racks=4, nodes_per_rack=16, uplinks=4)     # 64 nodes
-TREE_2TO1 = FatTreeConfig(racks=4, nodes_per_rack=16, uplinks=8)     # 64 nodes
-TREE_FLAT = FatTreeConfig(racks=4, nodes_per_rack=8, uplinks=8)      # 32 nodes, 1:1
-
 
 def run_scenario(tree, wl, *, algo="smartt", lb="reps", max_ticks=60000,
-                 **cfg_kw):
-    cfg = SimConfig(link=LINK, tree=tree, algo=algo, lb=lb, **cfg_kw)
-    sim = build(cfg, wl)
-    t0 = time.time()
-    st = sim.run(max_ticks=max_ticks)
-    st.now.block_until_ready()
-    wall = time.time() - t0
-    s = summarize(sim, st)
-    done_mask = np.asarray(st.done)
-    fd = s["fct_ticks"][done_mask]
-    s["jain"] = jain_fairness(fd) if done_mask.any() else 0.0
-    s["wall_s"] = wall
-    s["completion"] = int(fd.max()) if done_mask.any() else -1
-    return s
+                 seed=0, **cfg_kw) -> api.RunResult:
+    """Run one ad-hoc (tree, workload) setup through the experiment API
+    (DESIGN.md Sec. 7) -> typed :class:`api.RunResult` (completion, jain,
+    slowdowns, counters, wall_s)."""
+    sc = Scenario(name=wl.name,
+                  cfg=SimConfig(link=LINK, tree=tree, algo=algo, lb=lb,
+                                **cfg_kw),
+                  wl=wl, max_ticks=max_ticks)
+    return api.run(sc, seed=seed)
 
 
 def emit(name: str, wall_s: float, derived) -> str:

@@ -3,6 +3,8 @@
 Each ``figN_*`` function reproduces the *claim* of the corresponding paper
 figure at CPU scale and returns CSV rows; EXPERIMENTS.md Sec.
 Paper-validation records the comparison against the paper's own numbers.
+Runs go through the experiment API (``common.run_scenario`` -> typed
+``api.RunResult``: ``.completion``, ``.jain``, ``.trims``, ...).
 """
 
 from __future__ import annotations
@@ -54,9 +56,9 @@ def fig2_signals(quick=False):
         if mean_cwnd.min() > 1.5 * fair:
             conv = -1
         rows.append(emit(f"fig2_incast8to1_{algo}",
-                         s["wall_s"] + (_t.time() - t0),
-                         f"completion={s['completion']};jain={s['jain']:.3f};"
-                         f"trims={s['trims']};cwnd_conv_tick={conv}"))
+                         s.wall_s + (_t.time() - t0),
+                         f"completion={s.completion};jain={s.jain:.3f};"
+                         f"trims={s.trims};cwnd_conv_tick={conv}"))
     return rows
 
 
@@ -69,10 +71,10 @@ def fig3b_granularity(quick=False):
     for n in (1, 8, 50):
         s = run_scenario(TREE_FLAT, wl, algo="smartt", react_every=n,
                          max_ticks=_mt(60000, quick))
-        base = base or s["completion"]
-        rows.append(emit(f"fig3b_react_every_{n}", s["wall_s"],
-                         f"completion={s['completion']};"
-                         f"vs_perpacket={s['completion']/base:.3f}"))
+        base = base or s.completion
+        rows.append(emit(f"fig3b_react_every_{n}", s.wall_s,
+                         f"completion={s.completion};"
+                         f"vs_perpacket={s.completion/base:.3f}"))
     return rows
 
 
@@ -85,8 +87,8 @@ def fig5b_wtd(quick=False):
     for name, ovr in (("wtd_on", ()), ("wtd_off", (("wtd_thresh", 0.0),))):
         s = run_scenario(TREE_FLAT, wl, algo="smartt", cc_overrides=ovr,
                          max_ticks=_mt(60000, quick))
-        rows.append(emit(f"fig5b_{name}", s["wall_s"],
-                         f"completion={s['completion']};jain={s['jain']:.3f}"))
+        rows.append(emit(f"fig5b_{name}", s.wall_s,
+                         f"completion={s.completion};jain={s.jain:.3f}"))
     return rows
 
 
@@ -98,9 +100,9 @@ def fig6_reps(quick=False):
     for lb in ("reps", "spray", "plb", "ecmp"):
         s = run_scenario(TREE_4TO1, wl, algo="smartt", lb=lb,
                          max_ticks=_mt(60000, quick))
-        rows.append(emit(f"fig6_lb_{lb}", s["wall_s"],
-                         f"completion={s['completion']};jain={s['jain']:.3f};"
-                         f"trims={s['trims']}"))
+        rows.append(emit(f"fig6_lb_{lb}", s.wall_s,
+                         f"completion={s.completion};jain={s.jain:.3f};"
+                         f"trims={s.trims}"))
     return rows
 
 
@@ -114,15 +116,15 @@ def fig7_faults(quick=False):
         s = run_scenario(tree, wl, algo="smartt", lb=lb,
                          faults=((0, 3, 2),), fault_start=0,
                          max_ticks=_mt(60000, quick))
-        rows.append(emit(f"fig7a_degraded_{lb}", s["wall_s"],
-                         f"completion={s['completion']};trims={s['trims']}"))
+        rows.append(emit(f"fig7a_degraded_{lb}", s.wall_s,
+                         f"completion={s.completion};trims={s.trims}"))
     for lb in ("reps", "spray"):
         s = run_scenario(tree, wl, algo="smartt", lb=lb,
                          faults=((0, 3, 0),), fault_start=200,
                          max_ticks=_mt(60000, quick))
-        rows.append(emit(f"fig7c_linkdown_{lb}", s["wall_s"],
-                         f"completion={s['completion']};"
-                         f"blackholed={s['blackholed']}"))
+        rows.append(emit(f"fig7c_linkdown_{lb}", s.wall_s,
+                         f"completion={s.completion};"
+                         f"blackholed={s.blackholed}"))
     return rows
 
 
@@ -143,11 +145,11 @@ def fig9_trimming(quick=False):
                             max_ticks=_mt(60000, quick))
         noto = run_scenario(tree, wl, algo="smartt", trimming=False,
                             max_ticks=_mt(60000, quick))
-        delta = (noto["completion"] - base["completion"]) / brtt
-        rows.append(emit(f"fig9_{name}", base["wall_s"] + noto["wall_s"],
-                         f"trim={base['completion']};timeout={noto['completion']};"
+        delta = (noto.completion - base.completion) / brtt
+        rows.append(emit(f"fig9_{name}", base.wall_s + noto.wall_s,
+                         f"trim={base.completion};timeout={noto.completion};"
                          f"delta_brtt={delta:.2f};"
-                         f"spurious={noto['spurious_frac']:.4f}"))
+                         f"spurious={noto.spurious_frac:.4f}"))
     return rows
 
 
@@ -163,9 +165,9 @@ def fig10_incast(quick=False):
             s = run_scenario(TREE_FLAT, wl, algo=algo,
                              max_ticks=_mt(60000, quick))
             rows.append(emit(
-                f"fig10_incast{degree}_{size//KiB}K_{algo}", s["wall_s"],
-                f"completion={s['completion']};vs_ideal="
-                f"{s['completion']/ideal:.3f};jain={s['jain']:.3f}"))
+                f"fig10_incast{degree}_{size//KiB}K_{algo}", s.wall_s,
+                f"completion={s.completion};vs_ideal="
+                f"{s.completion/ideal:.3f};jain={s.jain:.3f}"))
     return rows
 
 
@@ -181,25 +183,25 @@ def fig11_permutation(quick=False):
             s = run_scenario(tree, wl, algo=algo,
                              max_ticks=_mt(120000, quick))
             rows.append(emit(
-                f"fig11_perm_{name}_{algo}", s["wall_s"],
-                f"completion={s['completion']};jain={s['jain']:.3f};"
-                f"trims={s['trims']}"))
+                f"fig11_perm_{name}_{algo}", s.wall_s,
+                f"completion={s.completion};jain={s.jain:.3f};"
+                f"trims={s.trims}"))
     # Fig 11c: multiple concurrent permutations
     wl = workloads.permutation(TREE_4TO1, size_bytes=_sz(512 * KiB, quick),
                                seed=8, n_perms=2)
     for algo in ("smartt", "eqds"):
         s = run_scenario(TREE_4TO1, wl, algo=algo,
                          max_ticks=_mt(120000, quick))
-        rows.append(emit(f"fig11c_multiperm_{algo}", s["wall_s"],
-                         f"completion={s['completion']};trims={s['trims']}"))
+        rows.append(emit(f"fig11c_multiperm_{algo}", s.wall_s,
+                         f"completion={s.completion};trims={s.trims}"))
     # Fig 11d: one bigger flow — FastIncrease reclaims bandwidth
     wl = workloads.permutation(TREE_4TO1, size_bytes=_sz(512 * KiB, quick),
                                seed=9, big_flow=(0, _sz(1 * MiB, quick)))
     for algo in ("smartt", "swift"):
         s = run_scenario(TREE_4TO1, wl, algo=algo,
                          max_ticks=_mt(120000, quick))
-        rows.append(emit(f"fig11d_bigflow_{algo}", s["wall_s"],
-                         f"completion={s['completion']}"))
+        rows.append(emit(f"fig11d_bigflow_{algo}", s.wall_s,
+                         f"completion={s.completion}"))
     return rows
 
 
@@ -212,9 +214,9 @@ def fig12_alltoall(quick=False):
                             nodes=16)
     for algo in ("smartt", "swift", "eqds"):
         s = run_scenario(tree, wl, algo=algo, max_ticks=_mt(200000, quick))
-        rows.append(emit(f"fig12_alltoall_w4_{algo}", s["wall_s"],
-                         f"completion={s['completion']};trims={s['trims']};"
-                         f"done={s['n_done']}"))
+        rows.append(emit(f"fig12_alltoall_w4_{algo}", s.wall_s,
+                         f"completion={s.completion};trims={s.trims};"
+                         f"done={s.n_done}"))
     return rows
 
 
@@ -227,9 +229,9 @@ def fig13_eqds(quick=False):
     for algo in ("eqds", "eqds_smartt", "smartt"):
         s = run_scenario(TREE_8TO1, wl, algo=algo,
                          max_ticks=_mt(120000, quick))
-        rows.append(emit(f"fig13_{algo}", s["wall_s"],
-                         f"completion={s['completion']};trims={s['trims']};"
-                         f"jain={s['jain']:.3f}"))
+        rows.append(emit(f"fig13_{algo}", s.wall_s,
+                         f"completion={s.completion};trims={s.trims};"
+                         f"jain={s.jain:.3f}"))
     return rows
 
 

@@ -31,16 +31,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (BENCH_JSON, LINK, TREE_4TO1, TREE_FLAT, emit,
-                               write_bench_json)
-from repro.netsim import workloads
-from repro.netsim.engine import SimConfig, build
-from repro.netsim.units import FatTreeConfig
-
-KiB = 1024
-MiB = 1024 * 1024
-
-TREE_TINY = FatTreeConfig(racks=2, nodes_per_rack=2, uplinks=2)   # 4 nodes
+from benchmarks.common import BENCH_JSON, emit, write_bench_json
+from repro.netsim.scenarios import scenario
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
@@ -62,57 +54,29 @@ def _legacy_baseline(cfg, wl, max_ticks):
 
 
 def scenarios(quick: bool):
-    """(name, tree, workload, max_ticks, backends) per standard scenario.
+    """(registry scenario name, backends) per standard dense scenario —
+    the names double as ledger row keys (``repro.netsim.scenarios``).
 
     The pallas backend runs the cc_update kernel in interpret mode on CPU
     (orders of magnitude slower per tick), so it only gets the smallest
     scenario of each mode; compiled-TPU runs lift that restriction.
     """
     if quick:
-        tiny_in = workloads.incast(TREE_TINY, degree=3, size_bytes=16 * KiB,
-                                   seed=0)
-        tiny_pm = workloads.permutation(TREE_TINY, size_bytes=32 * KiB, seed=1)
-        return [
-            ("tiny_incast3", TREE_TINY, tiny_in, 20000, ("jnp", "pallas")),
-            ("tiny_perm4", TREE_TINY, tiny_pm, 20000, ("jnp",)),
-        ]
-    return [
-        ("incast8_32n", TREE_FLAT,
-         workloads.incast(TREE_FLAT, degree=8, size_bytes=512 * KiB, seed=0),
-         60000, ("jnp", "pallas")),
-        ("perm64", TREE_4TO1,
-         workloads.permutation(TREE_4TO1, size_bytes=2 * MiB, seed=7),
-         60000, ("jnp",)),
-        ("alltoall16_w4", TREE_4TO1,
-         workloads.alltoall(TREE_4TO1, size_bytes=64 * KiB, window=4,
-                            nodes=16),
-         200000, ("jnp",)),
-    ]
+        return [("tiny_incast3", ("jnp", "pallas")),
+                ("tiny_perm4", ("jnp",))]
+    return [("incast8_32n", ("jnp", "pallas")),
+            ("perm64", ("jnp",)),
+            ("alltoall16_w4", ("jnp",))]
 
 
 def leap_scenarios(quick: bool):
-    """(name, tree, workload, max_ticks) for the sparse/large-message
-    scenarios measured leap-on vs leap-off.  Sized so the fabric idles for
-    most of the simulated span (heavy-tailed sizes with spread-out
-    arrivals; few large staggered transfers)."""
+    """Registry names of the sparse/large-message scenarios measured
+    leap-on vs leap-off — sized so the fabric idles for most of the
+    simulated span (heavy-tailed sizes with spread-out arrivals; few
+    large staggered transfers)."""
     if quick:
-        return [
-            ("tiny_sparse", TREE_TINY,
-             workloads.heavy_tailed(TREE_TINY, 8, size_base=8 * KiB,
-                                    size_cap=256 * KiB, gap_mean=1500.0,
-                                    seed=1),
-             30000),
-        ]
-    return [
-        ("sparse_heavy_32n", TREE_FLAT,
-         workloads.heavy_tailed(TREE_FLAT, 24, size_base=16 * KiB,
-                                size_cap=2 * MiB, gap_mean=2500.0, seed=3),
-         100000),
-        ("sparse_large_32n", TREE_FLAT,
-         workloads.staggered_large(TREE_FLAT, 8, 2 * MiB, gap_ticks=6000,
-                                   seed=0),
-         100000),
-    ]
+        return ["tiny_sparse"]
+    return ["sparse_heavy_32n", "sparse_large_32n"]
 
 
 def superstep_sizes(brtt: int, quick: bool):
@@ -138,22 +102,22 @@ def _measure(variants, reps):
     return walls, ticks
 
 
-def bench_scenario(name, tree, wl, max_ticks, backend, reps, quick):
+def bench_scenario(name, backend, reps, quick):
     """Measure the ungated reference and every superstep size, interleaved.
     Returns one row dict per variant.  The k-variants run the *production
     default* engine config (time leaping included — a no-op jump on these
     dense scenarios beyond the per-superstep horizon cost); each row
     records its ``leap`` flag so ledger comparisons are labeled."""
-    cfg0 = SimConfig(link=LINK, tree=tree, algo="smartt", cc_backend=backend)
-    base_sim = build(cfg0, wl)
+    sc = scenario(name, cc_backend=backend)
+    max_ticks = sc.max_ticks
+    base_sim = sc.build()
     # baseline: the pre-PR engine — legacy tick op structure under the
     # ungated one-tick-per-iteration while loop (see benchmarks/legacy.py)
-    variants = {"k1_ungated": _legacy_baseline(cfg0, wl, max_ticks)}
+    variants = {"k1_ungated": _legacy_baseline(sc.cfg, sc.wl, max_ticks)}
     sims = {}
     ksizes = superstep_sizes(base_sim.dims.brtt_inter, quick)
     for k in ksizes:
-        sim = build(SimConfig(link=LINK, tree=tree, algo="smartt",
-                              cc_backend=backend, superstep=k), wl)
+        sim = sc.with_(superstep=k).build()
         sims[f"k{k}"] = sim
         variants[f"k{k}"] = (lambda s=sim: s.run(max_ticks))
 
@@ -177,13 +141,14 @@ def bench_scenario(name, tree, wl, max_ticks, backend, reps, quick):
     return rows
 
 
-def bench_leap_scenario(name, tree, wl, max_ticks, reps):
+def bench_leap_scenario(name, reps):
     """Measure leap-on vs leap-off (superstep auto, jnp backend) on one
     sparse scenario, interleaved best-of.  Returns one row per variant."""
+    sc = scenario(name)
+    max_ticks = sc.max_ticks
     variants, sims = {}, {}
     for label, leap in (("leap_off", False), ("leap_on", True)):
-        sim = build(SimConfig(link=LINK, tree=tree, algo="smartt",
-                              leap=leap), wl)
+        sim = sc.with_(leap=leap).build()
         sims[label] = sim
         variants[label] = (lambda s=sim: s.run(max_ticks))
 
@@ -221,15 +186,13 @@ def main(argv=None) -> None:
     t0 = time.time()
     print("name,us_per_call,derived")
     rows = []
-    for name, tree, wl, max_ticks, backends in scenarios(args.quick):
+    for name, backends in scenarios(args.quick):
         if args.backends:
             backends = [b for b in args.backends.split(",") if b]
         for backend in backends:
-            rows.extend(bench_scenario(name, tree, wl, max_ticks, backend,
-                                       reps, args.quick))
-    for name, tree, wl, max_ticks in leap_scenarios(args.quick):
-        rows.extend(bench_leap_scenario(name, tree, wl, max_ticks,
-                                        min(reps, 2)))
+            rows.extend(bench_scenario(name, backend, reps, args.quick))
+    for name in leap_scenarios(args.quick):
+        rows.extend(bench_leap_scenario(name, min(reps, 2)))
     path = write_bench_json(
         "perf", rows, path=args.json_path,
         meta=dict(quick=bool(args.quick), reps=reps, jax=jax.__version__,

@@ -1,10 +1,18 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows.  The netsim figures always
-run; the roofline table is appended when the dry-run sweeps' JSON outputs
-exist (see repro.launch.dryrun).  With ``--json`` the rows are also
-recorded into the machine-readable ``BENCH_netsim.json`` ledger (section
-``figs``) via ``benchmarks.common.write_bench_json``.
+run (each through the experiment API — ``common.run_scenario`` returns a
+typed ``api.RunResult``); the roofline table is appended when the
+dry-run sweeps' JSON outputs exist (see repro.launch.dryrun).  With
+``--json`` the rows are also recorded into the machine-readable
+``BENCH_netsim.json`` ledger (section ``figs``) via
+``benchmarks.common.write_bench_json``.
+
+``--studies`` additionally runs the fused tuning-grid studies
+(``benchmarks.sweep``: {scenario x algo x GRID x seeds}, one compile per
+grid) and, with ``--json``, records their ``StudyResult`` rows into the
+``studies`` ledger section — compare PR-over-PR via
+``benchmarks.check_regression --section studies --metric completion``.
 
 ``--quick`` is plumbed through to every netsim figure (sizes and tick
 budgets scaled down for smoke runs); quick rows land in the separate
@@ -13,7 +21,7 @@ figures.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--json] [--json-path PATH]
-      [--quick] [fig2 fig6 ...]
+      [--quick] [--studies] [fig2 fig6 ...]
 """
 
 from __future__ import annotations
@@ -45,6 +53,10 @@ def main(argv=None) -> None:
     p.add_argument("--quick", action="store_true",
                    help="scaled-down smoke run (rows go to section "
                         "'figs_quick', never the full-size 'figs')")
+    p.add_argument("--studies", action="store_true",
+                   help="also run the fused tuning-grid studies "
+                        "(benchmarks.sweep) and record their StudyResult "
+                        "rows (section 'studies')")
     args = p.parse_args(argv)
 
     t0 = time.time()
@@ -74,6 +86,20 @@ def main(argv=None) -> None:
         from benchmarks.common import write_bench_json
         write_bench_json("figs_quick" if args.quick else "figs",
                          _row_dicts(rows, errors), path=args.json_path)
+
+    if args.studies:
+        from benchmarks import sweep as S
+        sweep_argv = []
+        if args.json or args.json_path:
+            sweep_argv.append("--json")
+        if args.json_path:
+            sweep_argv.extend(["--json-path", args.json_path])
+        if args.quick:
+            # scaled-down grid; rows go to section 'studies_quick' so a
+            # smoke run never touches the reviewed 'studies' baseline
+            sweep_argv.append("--quick")
+        print()
+        S.main(sweep_argv)
 
     # roofline table if the sweep artifacts exist
     here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -1,14 +1,18 @@
 """Permutation study: FCT distribution across transports and load
-balancers under core oversubscription (paper Fig. 1/6/11 interactively).
+balancers under core oversubscription (paper Fig. 1/6/11 interactively),
+plus a fused tuning Study — {initial window x seeds} in one compile.
 
   PYTHONPATH=src python examples/permutation_study.py [--oversub 4]
+      [--seeds 3]
 """
 
 import argparse
 
 import numpy as np
 
-from repro.netsim.engine import SimConfig, build, jain_fairness, summarize
+from repro.netsim import api
+from repro.netsim.scenarios import Scenario
+from repro.netsim.state import SimConfig
 from repro.netsim.units import FatTreeConfig, LinkConfig
 from repro.netsim import workloads
 
@@ -29,6 +33,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--oversub", type=int, default=4, choices=(2, 4, 8))
     ap.add_argument("--size-kib", type=int, default=1024)
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="decorrelation seeds for the tuning study")
     args = ap.parse_args()
 
     link = LinkConfig()
@@ -36,23 +42,43 @@ def main():
     tree = FatTreeConfig(racks=4, nodes_per_rack=per_rack,
                          uplinks=per_rack // args.oversub)
     wl = workloads.permutation(tree, size_bytes=args.size_kib * 1024, seed=1)
+    base = Scenario(name=f"perm_{args.oversub}to1",
+                    cfg=SimConfig(link=link, tree=tree),
+                    wl=wl, max_ticks=200_000)
     pkts = args.size_kib * 1024 // 4096
     ideal = pkts * args.oversub + 26
-    print(f"{tree.n_nodes}-node permutation, {args.oversub}:1 oversubscribed, "
-          f"{args.size_kib} KiB flows (ideal ~{ideal} ticks)\n")
+    print(f"{tree.n_nodes}-node permutation, {args.oversub}:1 "
+          f"oversubscribed, {args.size_kib} KiB flows "
+          f"(ideal ~{ideal} ticks)\n")
 
+    # one api.run per (algo, lb) — those change Dims, so each is a build
     for algo, lb in (("smartt", "reps"), ("smartt", "spray"),
                      ("smartt", "ecmp"), ("swift", "reps"),
                      ("eqds", "reps")):
-        sim = build(SimConfig(link=link, tree=tree, algo=algo, lb=lb), wl)
-        st = sim.run(max_ticks=200000)
-        s = summarize(sim, st)
-        fct = s["fct_ticks"][np.asarray(st.done)]
-        print(f"== {algo}+{lb}: completion {s['fct_max']} "
-              f"({s['fct_max']/ideal:.2f}x ideal), jain {jain_fairness(fct):.3f}, "
-              f"trims {s['trims']}")
-        print(cdf_sketch(fct))
+        r = api.run(base, algo=algo, lb=lb)
+        print(f"== {algo}+{lb}: completion {r.completion} "
+              f"({r.completion / ideal:.2f}x ideal), jain {r.jain:.3f}, "
+              f"trims {r.trims}")
+        print(cdf_sketch(r.fct_done))
         print()
+
+    # the tuning grid x seed batch, fused: every lane one compiled step
+    points = [{"start_cwnd_mult": a} for a in (0.5, 1.0, 1.25)]
+    seeds = range(args.seeds)
+    res = api.study(base, points=points, seeds=seeds).run()
+    print(f"tuning study: {len(points)} points x {res.n_seeds} seeds "
+          f"= {len(res)} lanes in one compile ({res.wall_s:.1f}s)")
+    print(f"{'start_cwnd_mult':>16s} {'completion (mean/max over seeds)':>34s}"
+          f" {'jain (min)':>11s}")
+    for pi, pt in enumerate(points):
+        lanes = res.by_point(pi)
+        comp = [r.completion for r in lanes]
+        print(f"{pt['start_cwnd_mult']:16.2f} "
+              f"{np.mean(comp):17.0f}/{max(comp):<16d} "
+              f"{min(r.jain for r in lanes):11.3f}")
+    best = res.best("completion")
+    print(f"\nbest lane: {best.name} -> completion {best.completion} "
+          f"({best.completion / ideal:.2f}x ideal)")
 
 
 if __name__ == "__main__":

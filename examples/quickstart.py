@@ -1,32 +1,51 @@
-"""Quickstart: simulate an 8:1 incast under SMaRTT and Swift, print the
-congestion-control story in 30 seconds.
+"""Quickstart: simulate an 8:1 incast under SMaRTT and its baselines via
+the experiment API, print the congestion-control story in 30 seconds.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [--quick]
+
+One call per algorithm: ``api.run(scenario(name, algo=...))`` resolves a
+registered scenario (fabric + workload + tick budget), runs it, and
+returns a typed ``RunResult`` — FCTs, Jain fairness, slowdowns vs the
+uncongested ideal, trim/retransmit counters.
 """
 
-import numpy as np
+import argparse
 
-from repro.netsim.engine import SimConfig, build, jain_fairness, summarize
-from repro.netsim.units import FatTreeConfig, LinkConfig, ticks_to_us
-from repro.netsim import workloads
+from repro.netsim.api import run
+from repro.netsim.scenarios import scenario
+from repro.netsim.units import ticks_to_us
 
-link = LinkConfig()                                   # 100 Gb/s, 4 KiB MTU
-tree = FatTreeConfig(racks=4, nodes_per_rack=8, uplinks=8)   # non-blocking
-wl = workloads.incast(tree, degree=8, size_bytes=512 * 1024, seed=0)
-ideal = 8 * (512 * 1024 // 4096) + 26
 
-print(f"8:1 incast of 512 KiB flows onto node 0 "
-      f"({tree.n_nodes} nodes, ideal {ideal} ticks)")
-print(f"{'algo':12s} {'FCT max':>9s} {'vs ideal':>9s} {'fairness':>9s} "
-      f"{'trims':>6s} {'completion':>12s}")
-for algo in ("smartt", "swift", "mprdma", "eqds"):
-    sim = build(SimConfig(link=link, tree=tree, algo=algo, lb="reps"), wl)
-    st = sim.run(max_ticks=60000)
-    s = summarize(sim, st)
-    fct = s["fct_ticks"][np.asarray(st.done)]
-    print(f"{algo:12s} {s['fct_max']:9d} {s['fct_max']/ideal:9.3f} "
-          f"{jain_fairness(fct):9.3f} {s['trims']:6d} "
-          f"{ticks_to_us(s['fct_max'], link):9.1f}us")
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller fabric/flows (CI smoke)")
+    args = ap.parse_args()
 
-print("\nSMaRTT's QuickAdapt collapses the initial burst within one "
-      "target-RTT;\nsee benchmarks/ for the full paper-figure suite.")
+    # registered scenarios are string-addressable; per-call overrides
+    # (algo=, lb=, max_ticks=...) fork the frozen base Scenario
+    name = "incast8_16n" if args.quick else "incast8_32n"
+    base = scenario(name)
+    degree = base.wl.n_flows
+    pkts = int(base.wl.size[0]) // base.cfg.link.mtu_bytes
+
+    print(f"{degree}:1 incast of {int(base.wl.size[0]) // 1024} KiB flows "
+          f"({base.cfg.tree.n_nodes} nodes) — scenario {name!r}")
+    print(f"{'algo':12s} {'FCT max':>9s} {'slowdown':>9s} {'fairness':>9s} "
+          f"{'trims':>6s} {'completion':>12s}")
+    for algo in ("smartt", "swift", "mprdma", "eqds"):
+        r = run(base, algo=algo)
+        assert r.all_done, f"{algo}: {r.n_done}/{r.n_flows} finished"
+        print(f"{algo:12s} {r.completion:9d} {r.slowdown_p99:9.3f} "
+              f"{r.jain:9.3f} {r.trims:6d} "
+              f"{ticks_to_us(r.completion, base.cfg.link):9.1f}us")
+
+    print(f"\n(ideal uncongested flow: {pkts} packets + 1 RTT; slowdown "
+          f"is FCT p99 vs that bound)")
+    print("SMaRTT's QuickAdapt collapses the initial burst within one "
+          "target-RTT;\nsee benchmarks/ for the full paper-figure suite "
+          "and api.study for {point x seed} grids.")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 vocab=151936 — GQA, QKV bias.  [arXiv:2407.10671; hf]
 
 14 heads do not divide a 16-way model axis: attention falls back to
-replicated projections (sharding rule, DESIGN.md Sec. 7) while MLP and
+replicated projections (sharding rule, DESIGN.md Sec. 8) while MLP and
 vocab still shard — the roofline shows the cost honestly.
 """
 

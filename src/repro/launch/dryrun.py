@@ -37,7 +37,7 @@ from repro.optim import adamw
 from repro.sharding import Shardings
 from repro.train.step import TrainConfig, make_train_step
 
-# Per-arch execution knobs (sized by the napkin math in DESIGN.md Sec. 7:
+# Per-arch execution knobs (sized by the napkin math in DESIGN.md Sec. 8:
 # microbatching + FSDP + sequence sharding + bf16 moments for the >=90B
 # models so everything fits 16 GB/chip).
 ARCH_RUN = {

@@ -1,6 +1,6 @@
 """PartitionSpec trees for parameters, optimizer state and step inputs.
 
-Rules (DESIGN.md Sec. 7), all with divisibility fallback:
+Rules (DESIGN.md Sec. 8), all with divisibility fallback:
 
 * Megatron TP on the model axis: column-parallel in-projections
   (wq/wk/wv/wuq/gate/up/wz/wx/wdt), row-parallel out-projections

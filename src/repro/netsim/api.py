@@ -1,0 +1,592 @@
+"""Experiment API: one declarative entry point for runs, seed batches,
+and parameter sweeps (DESIGN.md Sec. 7).
+
+The paper's evaluation is a grid of {workload x topology x algorithm x
+tuning x seeds}.  This module lowers that grid onto the engine in two
+calls::
+
+    res = run("incast8_32n")                      # one run -> RunResult
+    res = study("perm64",                          # P x S grid -> StudyResult
+                points=[{"start_cwnd_mult": a} for a in (0.5, 1.0, 1.25)],
+                seeds=range(4)).run()
+
+``study`` fuses the engine's two batching mechanisms — the per-seed salt
+scatter of ``Sim.run_batch`` and the per-point traced-``Consts`` batching
+of the config sweep — into a single ``[P*S]`` vmap lane batch driven by
+one superstep run loop:
+
+* **one compile** — the composed step is traced exactly once for the
+  whole grid (``engine.STEP_TRACE_COUNT``, asserted in tests/test_api.py);
+  swept ``Consts`` leaves carry a leading ``[P*S]`` axis, everything else
+  broadcasts;
+* **per-lane trajectories** — every lane is gated on its *own* exit
+  predicate and, when leaping, jumps by its *own* event horizon (clamped
+  to its remaining budget), so each lane's final ``SimState`` — ``now``
+  and metrics included — is **bit-for-bit equal** to the standalone
+  ``Sim.run`` of that (point, seed), leap on or off;
+* **donated buffers** — the freshly built ``[P*S]`` init state is donated
+  to the run loop (DESIGN.md Sec. 6.1 contract); the batched ``Consts``
+  are *not* donated and are reused across ``run()`` calls.
+
+Results come back typed: :class:`RunResult` (per-lane summary, Jain
+fairness, FCT slowdowns) and :class:`StudyResult` (point-major lane grid,
+tidy-row export for the fig scripts and the benchmark ledger).
+
+``engine.build(cfg, wl).run(...)`` and ``sweep.build_sweep(...)`` remain
+as thin compatibility wrappers over the same machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.netsim import engine, metrics, scenarios, state
+from repro.netsim.metrics import jain_fairness
+from repro.netsim.scenarios import Scenario
+
+I32 = jnp.int32
+
+# --------------------------------------------------------------------------
+# sweep points
+# --------------------------------------------------------------------------
+
+# make_cc_params tuning kwargs routable through SimConfig.cc_overrides
+CC_PARAM_KEYS = frozenset({
+    "target_mult", "fd", "md", "fi", "k_fast", "qa_scaling", "wtd_alpha",
+    "wtd_thresh", "fi_rtt_tol", "maxcwnd_mult", "sw_ai", "sw_beta",
+    "sw_max_mdf",
+})
+# numeric SimConfig fields that stay inside Consts (no Dims impact)
+CFG_KEYS = frozenset({
+    "rto_mult", "react_every", "credit_window_mult", "start_cwnd_mult",
+    "kmin_frac", "kmax_frac", "num_entropies", "fault_start",
+})
+# SimConfig fields that change Dims / the compiled step — never sweepable;
+# vary the Scenario instead (one build per value)
+STATIC_KEYS = frozenset({
+    "link", "tree", "algo", "cc_backend", "lb", "superstep", "leap",
+    "trimming", "faults", "cc_overrides",
+})
+
+
+def apply_point(cfg: state.SimConfig, point: Mapping[str, float]) -> state.SimConfig:
+    """Fold one sweep point into a SimConfig (cc keys -> cc_overrides)."""
+    cfg_kw = {}
+    cc = dict(cfg.cc_overrides)
+    for k, v in dict(point).items():
+        if k in CFG_KEYS:
+            cfg_kw[k] = v
+        elif k in CC_PARAM_KEYS:
+            cc[k] = v
+        elif k in STATIC_KEYS:
+            raise KeyError(
+                f"key {k!r} changes Dims (shapes/branches) and cannot be "
+                f"swept inside one compiled step; build one Scenario per "
+                f"value instead (scenario(name, {k}=...))")
+        else:
+            raise KeyError(
+                f"unsweepable key {k!r}; numeric keys are "
+                f"{sorted(CFG_KEYS | CC_PARAM_KEYS)}")
+    return dataclasses.replace(cfg, cc_overrides=tuple(sorted(cc.items())),
+                               **cfg_kw)
+
+
+def _norm_point(point) -> tuple:
+    """Normalize a sweep point to sorted ``((key, value), ...)``."""
+    return tuple(sorted(dict(point).items()))
+
+
+def point_tag(point) -> str:
+    """Human/ledger tag for a sweep point (``"base"`` for the empty one)."""
+    kv = _norm_point(point)
+    return "+".join(f"{k}={v:g}" for k, v in kv) if kv else "base"
+
+
+# --------------------------------------------------------------------------
+# Consts lane batching
+# --------------------------------------------------------------------------
+
+
+def no_axes(consts: state.Consts):
+    """An all-``None`` vmap in_axes tree matching ``consts``."""
+    leaves, treedef = jax.tree_util.tree_flatten(consts)
+    return jax.tree_util.tree_unflatten(treedef, [None] * len(leaves))
+
+
+def _stack_consts(consts_list: Sequence[state.Consts], repeats: int):
+    """Stack per-point Consts into a lane batch.
+
+    Leaves identical across points stay unbatched (vmap axis ``None``);
+    varying leaves are stacked to ``[P]`` and repeated ``repeats`` times
+    along axis 0 to ``[P*repeats]`` (point-major lane order).  Returns
+    ``(consts_b, axes)`` where ``axes`` is the matching in_axes tree.
+    """
+    flats, treedefs = zip(*[jax.tree_util.tree_flatten(c)
+                            for c in consts_list])
+    if any(td != treedefs[0] for td in treedefs[1:]):
+        raise ValueError("sweep points disagree on Consts structure")
+    leaves, axes_leaves = [], []
+    for slot in zip(*flats):
+        x0 = np.asarray(slot[0])
+        if all(np.array_equal(np.asarray(x), x0) for x in slot[1:]):
+            leaves.append(slot[0])
+            axes_leaves.append(None)
+        else:
+            stacked = jnp.stack([jnp.asarray(x) for x in slot])
+            leaves.append(jnp.repeat(stacked, repeats, axis=0)
+                          if repeats > 1 else stacked)
+            axes_leaves.append(0)
+    return (jax.tree_util.tree_unflatten(treedefs[0], leaves),
+            jax.tree_util.tree_unflatten(treedefs[0], axes_leaves))
+
+
+# --------------------------------------------------------------------------
+# the lane run loop
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
+                   donate_argnums=(6,))
+def _run_lanes(step_fn, horizon_fn, axes, max_ticks: int, superstep: int,
+               consts_b, states: state.SimState) -> state.SimState:
+    """Run a ``[B]`` lane batch to completion under one compiled step.
+
+    Each lane is gated on its *own* exit predicate — the same scalar
+    ``(now < max_ticks) & ~all(done)`` the standalone loop uses — so a
+    finished lane freezes (its gated tick is the identity, bitwise) while
+    the rest keep stepping, and every lane's final state equals its
+    standalone ``Sim.run`` bit-for-bit, ``now`` included.  With
+    ``horizon_fn`` the loop leaps **per lane**: each lane jumps by its own
+    next-event distance under its own swept ``Consts`` (clamped to its
+    remaining budget, zero once the lane is done), so sparse lanes skip
+    their quiescent stretches without waiting on busy lanes (DESIGN.md
+    Sec. 6.3).  The superstep structure (leap once, then K gated ticks per
+    while iteration) matches ``engine._superstep_loop`` exactly.
+
+    ``states`` is donated; ``consts_b`` is not (reused across calls).
+    """
+    def lane_live(st):
+        return (st.now < max_ticks) & ~jnp.all(st.done)
+
+    def lane_tick(c, st):
+        return jax.lax.cond(lane_live(st), lambda s: step_fn(c, s),
+                            lambda s: s, st)
+
+    vtick = jax.vmap(lane_tick, in_axes=(axes, 0))
+
+    def cond(st):
+        return jnp.any((st.now < max_ticks) & ~jnp.all(st.done, axis=-1))
+
+    leap = None
+    if horizon_fn is not None:
+        vhorizon = jax.vmap(horizon_fn, in_axes=(axes, 0))
+        vlive = jax.vmap(lane_live)
+
+        def leap(st):
+            d = jnp.minimum(vhorizon(consts_b, st), max_ticks - st.now)
+            d = jnp.where(vlive(st), d, 0)
+            occ = jnp.sum(st.q_size[:, :-1], axis=1)
+            return st._replace(now=st.now + d,
+                               m=metrics.leap_account(st.m, d, occ))
+
+    return engine._superstep_loop(lambda st: vtick(consts_b, st), cond,
+                                  superstep, leap)(states)
+
+
+# --------------------------------------------------------------------------
+# typed results
+# --------------------------------------------------------------------------
+
+
+def _flow_meta(sim: engine.Sim) -> dict:
+    """Host copies of the per-flow constants a RunResult carries."""
+    return dict(size=np.asarray(sim.consts.size),
+                t_start=np.asarray(sim.consts.t_start),
+                flow_brtt=np.asarray(sim.consts.cc.brtt))
+
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False)
+class RunResult:
+    """Typed summary of one finished run (one lane of a study).
+
+    Per-flow arrays are host-side numpy; ``state`` keeps the full final
+    ``SimState`` (host copies) for tests and deeper digging (excluded
+    from ``row()``)."""
+
+    scenario: str
+    algo: str
+    lb: str
+    point: tuple              # normalized ((key, value), ...), () = base
+    seed: int
+    max_ticks: int
+    ticks: int                # this lane's own final `now`
+    mtu: int
+    brtt: int                 # base RTT ticks == BDP packets
+    fct: np.ndarray           # i32 [NF], -1 = unfinished
+    goodput: np.ndarray       # i32 [NF] unique bytes delivered
+    done: np.ndarray          # bool [NF]
+    size: np.ndarray          # i32 [NF] flow bytes
+    t_start: np.ndarray       # i32 [NF]
+    flow_brtt: np.ndarray     # f32 [NF] per-flow base RTT (hop-specific)
+    trims: int
+    drops: int
+    blackholed: int
+    timeouts: int
+    retx: int
+    acks: int
+    spurious_retx: int
+    delivered_pkts: int
+    delivered_bytes: float
+    rtt_hist: np.ndarray
+    q_mean: float
+    q_max: int
+    wall_s: float | None = None
+    state: state.SimState | None = dataclasses.field(default=None)
+
+    @classmethod
+    def from_state(cls, sim: engine.Sim, st: state.SimState, *,
+                   scenario: str, point=(), seed: int = 0,
+                   max_ticks: int, wall_s: float | None = None,
+                   flow_meta: dict | None = None) -> "RunResult":
+        """Build from a (host or device) final state.  ``flow_meta`` lets a
+        Study hoist the per-flow constants (size/t_start/flow_brtt host
+        copies) out of its per-lane loop."""
+        if flow_meta is None:
+            flow_meta = _flow_meta(sim)
+        m = st.m
+        now = int(st.now)
+        return cls(
+            scenario=scenario, algo=sim.cfg.algo, lb=sim.cfg.lb,
+            point=_norm_point(point), seed=int(seed), max_ticks=int(max_ticks),
+            ticks=now, mtu=sim.dims.mtu, brtt=sim.dims.brtt_inter,
+            fct=np.asarray(st.fct), goodput=np.asarray(st.goodput),
+            done=np.asarray(st.done), **flow_meta,
+            trims=int(m.n_trim), drops=int(m.n_drop),
+            blackholed=int(m.n_black), timeouts=int(m.n_to),
+            retx=int(m.n_retx), acks=int(m.n_ack),
+            spurious_retx=int(m.spurious_retx),
+            delivered_pkts=int(m.delivered_pkts),
+            delivered_bytes=float(m.delivered_bytes),
+            rtt_hist=np.asarray(m.rtt_hist),
+            q_mean=float(m.q_sum) / max(1, now) / sim.dims.NQ,
+            q_max=int(m.q_max), wall_s=wall_s, state=st)
+
+    # -- flow-level views ---------------------------------------------------
+
+    @property
+    def n_flows(self) -> int:
+        return int(self.fct.shape[0])
+
+    @property
+    def n_done(self) -> int:
+        return int(self.done.sum())
+
+    @property
+    def all_done(self) -> bool:
+        return bool(self.done.all())
+
+    @property
+    def fct_done(self) -> np.ndarray:
+        return self.fct[self.done]
+
+    @property
+    def completion(self) -> int:
+        """Last flow-completion tick (-1 when nothing finished)."""
+        return int(self.fct_done.max()) if self.n_done else -1
+
+    @property
+    def fct_min(self) -> int:
+        return int(self.fct_done.min()) if self.n_done else -1
+
+    @property
+    def fct_mean(self) -> float:
+        return float(self.fct_done.mean()) if self.n_done else -1.0
+
+    @property
+    def fct_p99(self) -> float:
+        return float(np.percentile(self.fct_done, 99)) if self.n_done else -1.0
+
+    @property
+    def jain(self) -> float:
+        """Jain fairness over finished-flow FCTs."""
+        return jain_fairness(self.fct_done) if self.n_done else 0.0
+
+    @property
+    def ideal_fct(self) -> np.ndarray:
+        """Per-flow uncongested lower bound: back-to-back serialization of
+        ``ceil(size/mtu)`` packets plus that flow's base RTT (hop-count
+        specific — intra-rack flows have a shorter one)."""
+        pkts = -(-self.size.astype(np.int64) // self.mtu)
+        return np.maximum(pkts - 1 + self.flow_brtt.astype(np.float64), 1.0)
+
+    @property
+    def slowdown(self) -> np.ndarray:
+        """FCT slowdown vs the uncongested ideal (NaN for unfinished)."""
+        s = self.fct / self.ideal_fct.astype(np.float64)
+        return np.where(self.done, s, np.nan)
+
+    @property
+    def slowdown_mean(self) -> float:
+        return (float(np.nanmean(self.slowdown)) if self.n_done else -1.0)
+
+    @property
+    def slowdown_p99(self) -> float:
+        return (float(np.nanpercentile(self.slowdown, 99))
+                if self.n_done else -1.0)
+
+    @property
+    def spurious_frac(self) -> float:
+        return self.spurious_retx / max(1, self.delivered_pkts)
+
+    # -- export -------------------------------------------------------------
+
+    @property
+    def point_tag(self) -> str:
+        return point_tag(self.point)
+
+    @property
+    def name(self) -> str:
+        """Stable row key: ``scenario/algo+lb[point]/sN``."""
+        return (f"{self.scenario}/{self.algo}+{self.lb}"
+                f"[{self.point_tag}]/s{self.seed}")
+
+    def row(self) -> dict:
+        """One tidy, JSON-able row for fig scripts and the bench ledger."""
+        d = dict(
+            name=self.name, scenario=self.scenario, algo=self.algo,
+            lb=self.lb, point=dict(self.point), seed=self.seed,
+            max_ticks=self.max_ticks, ticks=self.ticks,
+            n_flows=self.n_flows, n_done=self.n_done,
+            all_done=self.all_done, completion=self.completion,
+            fct_mean=round(self.fct_mean, 3), fct_p99=round(self.fct_p99, 3),
+            jain=round(self.jain, 6),
+            slowdown_mean=round(self.slowdown_mean, 6),
+            slowdown_p99=round(self.slowdown_p99, 6),
+            trims=self.trims, drops=self.drops, blackholed=self.blackholed,
+            timeouts=self.timeouts, retx=self.retx,
+            spurious_frac=round(self.spurious_frac, 6),
+            delivered_bytes=self.delivered_bytes,
+            q_mean=round(self.q_mean, 6), q_max=self.q_max,
+        )
+        if self.wall_s is not None:
+            d["wall_s"] = round(self.wall_s, 6)
+        return d
+
+    def summary(self) -> dict:
+        """Legacy ``metrics.summarize``-shaped dict (compat helper)."""
+        return dict(
+            ticks=self.ticks, all_done=self.all_done, n_done=self.n_done,
+            fct_ticks=self.fct, fct_max=self.completion,
+            fct_min=self.fct_min, fct_mean=self.fct_mean,
+            fct_p99=self.fct_p99,
+            spread=(float(self.fct_done.max() - self.fct_done.min())
+                    if self.n_done else -1.0),
+            trims=self.trims, drops=self.drops, blackholed=self.blackholed,
+            timeouts=self.timeouts, retx=self.retx, acks=self.acks,
+            delivered_bytes=self.delivered_bytes,
+            spurious_retx=self.spurious_retx,
+            spurious_frac=self.spurious_frac, rtt_hist=self.rtt_hist,
+            q_mean=self.q_mean, q_max=self.q_max,
+            goodput_bytes=self.goodput, mtu=self.mtu)
+
+    def __repr__(self) -> str:
+        return (f"RunResult({self.name}: ticks={self.ticks} "
+                f"done={self.n_done}/{self.n_flows} "
+                f"completion={self.completion} jain={self.jain:.3f} "
+                f"trims={self.trims})")
+
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False)
+class StudyResult:
+    """The finished ``P x S`` grid: point-major lanes of RunResults."""
+
+    scenario: str
+    points: tuple             # P normalized points
+    seeds: tuple              # S ints
+    results: tuple            # P*S RunResults, lane = p*S + s
+    states: state.SimState    # [P*S]-batched final states
+    wall_s: float
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __getitem__(self, lane) -> RunResult:
+        return self.results[lane]
+
+    @property
+    def n_points(self) -> int:
+        return len(self.points)
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.seeds)
+
+    def lane(self, point_idx: int, seed_idx: int = 0) -> RunResult:
+        return self.results[point_idx * self.n_seeds + seed_idx]
+
+    def by_point(self, point_idx: int) -> tuple:
+        """All seeds of one sweep point."""
+        s = self.n_seeds
+        return self.results[point_idx * s:(point_idx + 1) * s]
+
+    def rows(self) -> list:
+        """Tidy rows (one per lane) for fig scripts / the bench ledger."""
+        return [r.row() for r in self.results]
+
+    def best(self, metric: str = "completion") -> RunResult:
+        """Lane minimizing ``metric`` (unfinished lanes rank last)."""
+        def key(r):
+            v = getattr(r, metric)
+            return (not r.all_done, v if v >= 0 else np.inf)
+        return min(self.results, key=key)
+
+    def __repr__(self) -> str:
+        return (f"StudyResult({self.scenario}: {self.n_points} points x "
+                f"{self.n_seeds} seeds, wall {self.wall_s:.2f}s)")
+
+
+# --------------------------------------------------------------------------
+# the Study planner
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False)
+class Study:
+    """A planned ``Scenario x points x seeds`` grid, lowered onto one
+    compiled step.  Build via :func:`study`; execute via :meth:`run`
+    (typed results) or :meth:`run_states` (raw ``[P*S]`` states)."""
+
+    scenario: Scenario
+    points: tuple             # P normalized ((k, v), ...) points
+    seeds: tuple              # S ints
+    sim: engine.Sim           # built for the base config
+    consts_b: state.Consts    # swept leaves carry a leading [P*S] axis
+    axes: state.Consts        # matching vmap in_axes tree (0 / None)
+    salts: tuple              # P*S ints, lane = p*S + s -> seeds[s]
+
+    @property
+    def n_points(self) -> int:
+        return len(self.points)
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.seeds)
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.salts)
+
+    def init(self) -> state.SimState:
+        """The ``[P*S]`` tick-0 lane batch: one vmapped ``init_state``
+        trace over the batched Consts, then the per-lane seed salts.
+        Every leaf is a fresh buffer (donation-safe)."""
+        dims = self.sim.dims
+        states = jax.vmap(lambda c: state.init_state(dims, c),
+                          in_axes=(self.axes,),
+                          axis_size=self.n_lanes)(self.consts_b)
+        return states._replace(salt=jnp.asarray(self.salts, I32))
+
+    def run_states(self, max_ticks: int | None = None) -> state.SimState:
+        """Run all lanes to completion; one step compile for the grid.
+        The freshly built lane batch is donated to the run loop."""
+        mt = int(max_ticks if max_ticks is not None
+                 else self.scenario.max_ticks)
+        horizon_fn = self.sim.horizon_fn if self.sim.dims.leap else None
+        return _run_lanes(self.sim.step_fn, horizon_fn, self.axes, mt,
+                          self.sim.dims.superstep, self.consts_b, self.init())
+
+    def run(self, max_ticks: int | None = None) -> StudyResult:
+        """Execute the grid and pull typed per-lane results."""
+        mt = int(max_ticks if max_ticks is not None
+                 else self.scenario.max_ticks)
+        t0 = time.time()
+        states = self.run_states(mt)
+        states.now.block_until_ready()
+        wall = time.time() - t0
+        # one bulk device->host transfer; lanes then slice numpy (the
+        # per-lane RunResults would otherwise issue ~25 tiny transfers
+        # per lane)
+        states_h = jax.device_get(states)
+        meta = _flow_meta(self.sim)
+        results = []
+        for pi, pt in enumerate(self.points):
+            for si, seed in enumerate(self.seeds):
+                lane = pi * self.n_seeds + si
+                lane_st = jax.tree.map(lambda x: x[lane], states_h)
+                results.append(RunResult.from_state(
+                    self.sim, lane_st, scenario=self.scenario.name,
+                    point=pt, seed=seed, max_ticks=mt, flow_meta=meta))
+        return StudyResult(scenario=self.scenario.name, points=self.points,
+                           seeds=self.seeds, results=tuple(results),
+                           states=states, wall_s=wall)
+
+    def __repr__(self) -> str:
+        return (f"Study({self.scenario.name}: {self.n_points} points x "
+                f"{self.n_seeds} seeds = {self.n_lanes} lanes)")
+
+
+def _resolve(sc) -> Scenario:
+    return scenarios.scenario(sc) if isinstance(sc, str) else sc
+
+
+def study(sc, points=None, seeds=(0,), **scenario_overrides) -> Study:
+    """Plan a ``Scenario x points x seeds`` grid as one compiled step.
+
+    ``sc`` is a :class:`Scenario` or a registered scenario name;
+    ``points`` a sequence of sweep-point mappings (numeric ``SimConfig``
+    fields and CC tuning kwargs — see ``CFG_KEYS`` / ``CC_PARAM_KEYS``;
+    ``None`` or ``[{}]`` = just the base config); ``seeds`` the per-lane
+    salt seeds.  Anything per-point that would change ``Dims`` raises at
+    plan time (``KeyError``)."""
+    sc = _resolve(sc)
+    if scenario_overrides:
+        sc = sc.with_(**scenario_overrides)
+    pts = (tuple(_norm_point(p) for p in points)
+           if points is not None else ((),))
+    if not pts:
+        raise ValueError("empty sweep")
+    seeds = tuple(int(s) for s in seeds)
+    if not seeds:
+        raise ValueError("empty seeds")
+    # engine.build -> state.derive validates the workload up front
+    sim = engine.build(sc.cfg, sc.wl)
+    # derive() is re-run per point: that repeats the O(NF) structural host
+    # loops, but keeps a single source of truth for Consts derivation.
+    # Host-side cost is negligible next to the device run; identical
+    # leaves are deduplicated in _stack_consts.
+    consts_list = [sim.consts if not pt
+                   else state.derive(apply_point(sc.cfg, dict(pt)), sc.wl)[3]
+                   for pt in pts]
+    consts_b, axes = _stack_consts(consts_list, repeats=len(seeds))
+    salts = tuple(np.tile(np.asarray(seeds, np.int64), len(pts)).tolist())
+    return Study(scenario=sc, points=pts, seeds=seeds, sim=sim,
+                 consts_b=consts_b, axes=axes, salts=salts)
+
+
+def run(sc, *, seed: int = 0, max_ticks: int | None = None,
+        **scenario_overrides) -> RunResult:
+    """Run one scenario standalone (unbatched ``Sim.run``) -> RunResult.
+
+    ``sc`` is a :class:`Scenario` or a registered name; ``overrides`` are
+    forwarded to :meth:`Scenario.with_` (``algo=``, ``lb=``, ...)."""
+    sc = _resolve(sc)
+    if scenario_overrides:
+        sc = sc.with_(**scenario_overrides)
+    mt = int(max_ticks if max_ticks is not None else sc.max_ticks)
+    sim = engine.build(sc.cfg, sc.wl)   # derive validates the workload
+    t0 = time.time()
+    st = sim.run(max_ticks=mt, seed=seed)
+    st.now.block_until_ready()
+    wall = time.time() - t0
+    return RunResult.from_state(sim, jax.device_get(st), scenario=sc.name,
+                                seed=seed, max_ticks=mt, wall_s=wall)

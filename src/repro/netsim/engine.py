@@ -35,7 +35,11 @@ function ``(Dims, Consts, SimState) -> SimState``:
 (``cc_backend="jnp"`` pure jnp, or ``"pallas"`` for the ``kernels/
 cc_update`` kernel) and composes the phases over a ``Consts`` bundle of
 traced numerics — so retuning any parameter, or sweeping a whole grid of
-them (``netsim/sweep.py``), reuses one compiled step.
+them, reuses one compiled step.  Batched execution (seed batches, sweep
+grids, full seed x point studies) lives in the experiment API
+(``netsim/api.py``, DESIGN.md Sec. 7): its lane loop vmaps ``step_fn``
+over ``[P*S]`` lanes with per-lane exit gating and leap horizons;
+``Sim.run_batch`` here is a thin wrapper over it.
 """
 
 from __future__ import annotations
@@ -85,8 +89,13 @@ class Sim:
     def _leap_horizon(self):
         return self.horizon if self.dims.leap else None
 
-    def run(self, max_ticks: int) -> SimState:
-        return _run_until_done(self.step, self._leap_horizon(), self.init(),
+    def run(self, max_ticks: int, seed: int = 0) -> SimState:
+        """Run to completion.  ``seed`` sets the per-run hash salt
+        (RED/ECMP decorrelation) — seed 0 is the historical default."""
+        st0 = self.init()
+        if seed:
+            st0 = st0._replace(salt=jnp.asarray(seed, I32))
+        return _run_until_done(self.step, self._leap_horizon(), st0,
                                max_ticks, self.dims.superstep)
 
     def run_trace(self, ticks: int, trace_flows: int = 8):
@@ -94,8 +103,10 @@ class Sim:
 
     def run_batch(self, seeds, max_ticks: int) -> SimState:
         """vmap a batch of decorrelated runs (per-seed RED/ECMP salts) —
-        amortizes per-op dispatch on CPU and maps onto pjit batching for
-        parameter sweeps at scale.
+        a thin compatibility wrapper over the experiment API's lane loop
+        (``api._run_lanes``; one compiled step, per-lane exit gating and
+        leap horizons, so each lane matches its standalone ``run(seed=s)``
+        bit-for-bit).
 
         The init state is built once and broadcast over the batch —
         only the per-seed ``salt`` is scattered (asserted by the
@@ -103,14 +114,18 @@ class Sim:
         each broadcast leaf is a fresh buffer, so donation stays legal.
         """
         import numpy as _np
+
+        from repro.netsim import api
         seeds = jnp.asarray(_np.asarray(seeds), I32)
         base = self.init()
         states = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (seeds.shape[0],) + x.shape),
             base)
         states = states._replace(salt=seeds)
-        return _run_batch(self.step, self._leap_horizon(), states, max_ticks,
-                          self.dims.superstep)
+        return api._run_lanes(self.step_fn,
+                              self.horizon_fn if self.dims.leap else None,
+                              api.no_axes(self.consts), max_ticks,
+                              self.dims.superstep, self.consts, states)
 
 
 # --------------------------------------------------------------------------
@@ -162,8 +177,9 @@ def build(cfg: SimConfig, wl: Workload) -> Sim:
 # iteration, amortizing the loop round-trip over K ticks.  Each fused tick
 # is gated on the *same* exit predicate via ``lax.cond`` (so the cheap
 # reduction still runs per tick, but as part of the fused body) — the
-# predicate is scalar (reduced over flows, and over the batch for the
-# batched loops) so the cond stays a real branch, and once the run
+# predicate is scalar (reduced over flows; the api lane loop additionally
+# gates each lane on its own predicate) so the cond stays a real branch,
+# and once the run
 # finishes or hits max_ticks the remaining ticks of the superstep are
 # identity — which makes every K > 1 trajectory bit-for-bit identical to
 # K = 1, including ``now`` and all metrics counters (asserted in
@@ -219,19 +235,6 @@ def _leap(horizon, max_ticks):
     return leap
 
 
-def _leap_batched(vhorizon, max_ticks):
-    """Batched time leap: all lanes share ``now`` (the exit predicate
-    reads ``now[0]``), so the safe jump is the min horizon over the
-    batch — lanes with nearer events simply execute their eventful ticks,
-    lanes without execute state no-ops."""
-    def leap(st):
-        d = jnp.minimum(jnp.min(vhorizon(st)), max_ticks - st.now[0])
-        occ = jnp.sum(st.q_size[:, :-1], axis=1)
-        return st._replace(now=st.now + d,
-                           m=metrics.leap_account(st.m, d, occ))
-    return leap
-
-
 @functools.partial(jax.jit, static_argnums=(0, 1, 3, 4), donate_argnums=(2,))
 def _run_until_done(step, horizon, state0: SimState, max_ticks: int,
                     superstep: int) -> SimState:
@@ -240,20 +243,6 @@ def _run_until_done(step, horizon, state0: SimState, max_ticks: int,
 
     leap = _leap(horizon, max_ticks) if horizon is not None else None
     return _superstep_loop(step, cond, superstep, leap)(state0)
-
-
-@functools.partial(jax.jit, static_argnums=(0, 1, 3, 4), donate_argnums=(2,))
-def _run_batch(step, horizon, states: SimState, max_ticks: int,
-               superstep: int) -> SimState:
-    """Run a [B]-batched state bundle to completion (vmapped step)."""
-    vstep = jax.vmap(step)
-
-    def cond(st):
-        return (st.now[0] < max_ticks) & ~jnp.all(st.done)
-
-    leap = (_leap_batched(jax.vmap(horizon), max_ticks)
-            if horizon is not None else None)
-    return _superstep_loop(vstep, cond, superstep, leap)(states)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))

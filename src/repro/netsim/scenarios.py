@@ -1,0 +1,179 @@
+"""Declarative scenario catalogue: named, frozen (config, workload,
+max_ticks) bundles — the string-addressable entry points of the
+experiment API (DESIGN.md Sec. 7).
+
+A :class:`Scenario` fixes everything a run needs *except* the tuning
+point and the seed: the fabric (``SimConfig.tree``/``link``), the
+algorithm and load balancer, fault injection, the traffic table, and the
+tick budget.  ``netsim/api.py`` takes a Scenario and lowers
+``Scenario x sweep points x seeds`` onto one compiled step.
+
+The registry maps short stable names (``"incast8_32n"``, ``"perm64"``,
+``"sparse_heavy_32n"``, ...) to factories; the names double as benchmark
+ledger keys (``BENCH_netsim.json``), so keep them stable.  ``scenario()``
+resolves a name and applies per-call config overrides::
+
+    sc = scenario("perm64", algo="swift")          # same grid, new CC
+    sc = scenario("incast8_32n", max_ticks=30_000)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.netsim import workloads
+from repro.netsim.state import SimConfig
+from repro.netsim.units import FatTreeConfig, LinkConfig
+from repro.netsim.workloads import Workload
+
+KiB = 1024
+MiB = 1024 * 1024
+
+# Standard scaled topologies (EXPERIMENTS.md Sec. "Scaled topologies").
+# benchmarks/common.py re-exports these; the paper's 1024-node 800 Gb/s
+# fabric is scaled to CPU-tractable sizes with relative behavior as the
+# reproduction target.
+TREE_8TO1 = FatTreeConfig(racks=8, nodes_per_rack=16, uplinks=2)   # 128 nodes
+TREE_4TO1 = FatTreeConfig(racks=4, nodes_per_rack=16, uplinks=4)   # 64 nodes
+TREE_2TO1 = FatTreeConfig(racks=4, nodes_per_rack=16, uplinks=8)   # 64 nodes
+TREE_FLAT = FatTreeConfig(racks=4, nodes_per_rack=8, uplinks=8)    # 32, 1:1
+TREE_16 = FatTreeConfig(racks=2, nodes_per_rack=8, uplinks=2)      # 16, 4:1
+TREE_TINY = FatTreeConfig(racks=2, nodes_per_rack=2, uplinks=2)    # 4 nodes
+
+LINK = LinkConfig()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Scenario:
+    """One named experiment setup: config + workload + tick budget.
+
+    Frozen and declarative — building, running, and sweeping happen in
+    ``netsim/api.py`` (``api.run`` / ``api.study``); the Scenario itself
+    holds no compiled or device state.
+    """
+
+    name: str
+    cfg: SimConfig
+    wl: Workload
+    max_ticks: int = 60_000
+
+    def with_(self, *, name: str | None = None, max_ticks: int | None = None,
+              wl: Workload | None = None, **cfg_overrides) -> "Scenario":
+        """A copy with config fields (``algo=``, ``lb=``, ``faults=`` ...),
+        the workload, or the tick budget replaced."""
+        cfg = (dataclasses.replace(self.cfg, **cfg_overrides)
+               if cfg_overrides else self.cfg)
+        return dataclasses.replace(
+            self, cfg=cfg,
+            name=self.name if name is None else name,
+            max_ticks=self.max_ticks if max_ticks is None else int(max_ticks),
+            wl=self.wl if wl is None else wl)
+
+    def build(self):
+        """Compile this scenario's simulator (``engine.build``)."""
+        from repro.netsim import engine
+        return engine.build(self.cfg, self.wl)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], Scenario]] = {}
+
+
+def register(name: str, factory: Callable[[], Scenario], *aliases: str):
+    """Register a scenario factory under ``name`` (and ``aliases``)."""
+    for key in (name,) + aliases:
+        if key in _REGISTRY:
+            raise ValueError(f"scenario {key!r} already registered")
+        _REGISTRY[key] = factory
+    return factory
+
+
+def names() -> tuple:
+    """Registered scenario names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def scenario(name: str, **overrides) -> Scenario:
+    """Resolve a registered scenario by name; ``overrides`` are forwarded
+    to :meth:`Scenario.with_` (config fields, ``max_ticks``)."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {', '.join(names())}"
+        ) from None
+    sc = factory()
+    return sc.with_(**overrides) if overrides else sc
+
+
+def _std(name: str, tree: FatTreeConfig, wl: Workload,
+         max_ticks: int) -> Scenario:
+    return Scenario(name=name, cfg=SimConfig(link=LINK, tree=tree),
+                    wl=wl, max_ticks=max_ticks)
+
+
+# --------------------------------------------------------------------------
+# catalogue — names are ledger keys (BENCH_netsim.json); keep stable
+# --------------------------------------------------------------------------
+
+# tiny smoke scenarios (CI bench smoke, `--quick` modes)
+register("tiny_incast3", lambda: _std(
+    "tiny_incast3", TREE_TINY,
+    workloads.incast(TREE_TINY, degree=3, size_bytes=16 * KiB, seed=0),
+    20_000))
+register("tiny_perm4", lambda: _std(
+    "tiny_perm4", TREE_TINY,
+    workloads.permutation(TREE_TINY, size_bytes=32 * KiB, seed=1),
+    20_000))
+register("tiny_sparse", lambda: _std(
+    "tiny_sparse", TREE_TINY,
+    workloads.heavy_tailed(TREE_TINY, 8, size_base=8 * KiB,
+                           size_cap=256 * KiB, gap_mean=1500.0, seed=1),
+    30_000))
+
+# dense standard scenarios (perf ledger rows, figures)
+register("incast8_32n", lambda: _std(
+    "incast8_32n", TREE_FLAT,
+    workloads.incast(TREE_FLAT, degree=8, size_bytes=512 * KiB, seed=0),
+    60_000), "incast_8x1_32n")
+register("incast_32x1", lambda: _std(
+    "incast_32x1", TREE_4TO1,
+    workloads.incast(TREE_4TO1, degree=32, size_bytes=256 * KiB, seed=0),
+    60_000))
+register("perm64", lambda: _std(
+    "perm64", TREE_4TO1,
+    workloads.permutation(TREE_4TO1, size_bytes=2 * MiB, seed=7),
+    60_000), "perm_64n")
+register("perm128_8to1", lambda: _std(
+    "perm128_8to1", TREE_8TO1,
+    workloads.permutation(TREE_8TO1, size_bytes=512 * KiB, seed=7),
+    120_000))
+register("alltoall16_w4", lambda: _std(
+    "alltoall16_w4", TREE_4TO1,
+    workloads.alltoall(TREE_4TO1, size_bytes=64 * KiB, window=4, nodes=16),
+    200_000))
+
+# small 4:1 grid for tuning studies (benchmarks/sweep.py)
+register("incast8_16n", lambda: _std(
+    "incast8_16n", TREE_16,
+    workloads.incast(TREE_16, degree=8, size_bytes=64 * 4096, seed=3),
+    60_000))
+register("perm_16n", lambda: _std(
+    "perm_16n", TREE_16,
+    workloads.permutation(TREE_16, size_bytes=64 * 4096, seed=3),
+    60_000))
+
+# sparse/large-message scenarios (event-horizon leap targets, DESIGN 6.3)
+register("sparse_heavy_32n", lambda: _std(
+    "sparse_heavy_32n", TREE_FLAT,
+    workloads.heavy_tailed(TREE_FLAT, 24, size_base=16 * KiB,
+                           size_cap=2 * MiB, gap_mean=2500.0, seed=3),
+    100_000))
+register("sparse_large_32n", lambda: _std(
+    "sparse_large_32n", TREE_FLAT,
+    workloads.staggered_large(TREE_FLAT, 8, 2 * MiB, gap_ticks=6000, seed=0),
+    100_000))

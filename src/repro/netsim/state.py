@@ -225,6 +225,7 @@ def derive(cfg: SimConfig, wl: Workload):
 
     N, NQ, NE = tree.n_nodes, topo.n_queues, topo.n_emitters
     NF = wl.n_flows
+    wl.validate(n_nodes=N)   # reject bad tables before any shape math
     MTU = float(link.mtu_bytes)
     CAP = int(tm.brtt_inter)                      # 1 BDP per port queue
     # sent-ring slots: 1.5x the max window in packets (seq-range headroom;
@@ -236,9 +237,6 @@ def derive(cfg: SimConfig, wl: Workload):
     max_pkts = int(np.ceil(wl.size.max() / MTU))
     MAXW = (max_pkts + 31) // 32
     P, U, M = tree.racks, tree.uplinks, tree.nodes_per_rack
-
-    if np.any(wl.src == wl.dst):
-        raise ValueError("flow with src == dst")
 
     # ---- per-flow constants ----
     # ACK return delay is *globally constant*: the ack ring is indexed

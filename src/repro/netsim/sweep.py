@@ -1,21 +1,12 @@
-"""Batched config-sweep runner: an N-point parameter grid for one compile.
+"""Batched config-sweep runner — thin compatibility wrapper over the
+experiment API (``netsim/api.py``, DESIGN.md Sec. 7).
 
 Every numeric knob of the simulator is *traced* (it lives in ``Consts``,
-not in the closed-over ``Dims``), so evaluating N parameter settings of the
-same (topology, workload, algorithm) does not need N compilations — it
-needs one ``vmap`` of the already-composed step over a batch of ``Consts``
-where only the swept leaves carry a leading [B] axis.
-
-Sweepable keys (any mix per point):
-  * CC algorithm constants — the ``make_cc_params`` tuning kwargs
-    (``fd``, ``md``, ``fi``, ``k_fast``, ``qa_scaling``, ``wtd_alpha``,
-    ``wtd_thresh``, ``fi_rtt_tol``, ``target_mult``, ``maxcwnd_mult``,
-    ``sw_ai``, ``sw_beta``, ``sw_max_mdf``)
-  * numeric ``SimConfig`` fields — ``start_cwnd_mult``, ``react_every``,
-    ``rto_mult``, ``credit_window_mult``, ``kmin_frac``, ``kmax_frac``,
-    ``num_entropies``, ``fault_start``
-
-Usage::
+not in the closed-over ``Dims``), so evaluating N parameter settings of
+the same (topology, workload, algorithm) needs one compilation, not N.
+New code should call ``api.study`` directly — it additionally crosses the
+sweep with seed batches and returns typed results; ``build_sweep`` keeps
+the historical shape::
 
     points = [{"start_cwnd_mult": a, "react_every": r}
               for a in (0.5, 1.25) for r in (1, 2, 4, 8)]
@@ -23,85 +14,68 @@ Usage::
     states = sw.run(max_ticks=30000)        # [B]-batched SimState
     rows = sw.summaries(states)             # one summarize() dict per point
 
-The static shape of the run (tree, workload, algorithm, backend, lb,
-trimming) must agree across points; anything per-point that would change
-``Dims`` raises at build time.
+Sweepable keys are ``api.CFG_KEYS | api.CC_PARAM_KEYS`` (re-exported
+here); anything per-point that would change ``Dims`` raises at build
+time.  The run loop is the api lane loop: one compiled step per grid,
+with each point gated on its own exit predicate and leaping by its own
+event horizon — so every point's final state (``now`` and metrics
+included) is bit-for-bit the standalone ``engine.build(...).run()`` of
+that config (tests/test_api.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Mapping, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.netsim import engine, metrics, state
-
-# make_cc_params tuning kwargs routable through SimConfig.cc_overrides
-CC_PARAM_KEYS = frozenset({
-    "target_mult", "fd", "md", "fi", "k_fast", "qa_scaling", "wtd_alpha",
-    "wtd_thresh", "fi_rtt_tol", "maxcwnd_mult", "sw_ai", "sw_beta",
-    "sw_max_mdf",
-})
-# numeric SimConfig fields that stay inside Consts (no Dims impact)
-CFG_KEYS = frozenset({
-    "rto_mult", "react_every", "credit_window_mult", "start_cwnd_mult",
-    "kmin_frac", "kmax_frac", "num_entropies", "fault_start",
-})
+from repro.netsim import api, engine, metrics, state
+from repro.netsim.api import (CC_PARAM_KEYS, CFG_KEYS,  # noqa: F401 (re-export)
+                              apply_point)
+from repro.netsim.scenarios import Scenario
 
 
-def apply_point(cfg: state.SimConfig, point: Mapping[str, float]) -> state.SimConfig:
-    """Fold one sweep point into a SimConfig (cc keys -> cc_overrides)."""
-    cfg_kw = {}
-    cc = dict(cfg.cc_overrides)
-    for k, v in point.items():
-        if k in CFG_KEYS:
-            cfg_kw[k] = v
-        elif k in CC_PARAM_KEYS:
-            cc[k] = v
-        else:
-            raise KeyError(
-                f"unsweepable key {k!r}; numeric keys are "
-                f"{sorted(CFG_KEYS | CC_PARAM_KEYS)}")
-    return dataclasses.replace(cfg, cc_overrides=tuple(sorted(cc.items())),
-                               **cfg_kw)
-
-
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Sweep:
-    """A compiled simulator plus a [B]-batched Consts bundle."""
+    """A planned N-point grid (an ``api.Study`` with a single seed)."""
 
-    sim: engine.Sim
-    points: tuple
-    consts_b: state.Consts       # swept leaves carry a leading [B] axis
-    axes: state.Consts           # matching vmap in_axes tree (0 / None)
+    study: api.Study
+
+    @property
+    def sim(self) -> engine.Sim:
+        return self.study.sim
+
+    @property
+    def points(self) -> tuple:
+        return tuple(dict(p) for p in self.study.points)
 
     @property
     def n_points(self) -> int:
-        return len(self.points)
+        return self.study.n_points
+
+    @property
+    def consts_b(self) -> state.Consts:
+        return self.study.consts_b
+
+    @property
+    def axes(self) -> state.Consts:
+        return self.study.axes
 
     def init(self) -> state.SimState:
-        dims = self.sim.dims
-        return jax.vmap(lambda c: state.init_state(dims, c),
-                        in_axes=(self.axes,),
-                        axis_size=self.n_points)(self.consts_b)
+        return self.study.init()
 
     def run(self, max_ticks: int) -> state.SimState:
         """Run all points to completion; one step compilation total.
         The freshly built [B]-batched state is donated to the run loop."""
-        horizon_fn = self.sim.horizon_fn if self.sim.dims.leap else None
-        return _run_sweep(self.sim.step_fn, horizon_fn, self.axes, max_ticks,
-                          self.sim.dims.superstep, self.consts_b, self.init())
+        return self.study.run_states(max_ticks=max_ticks)
 
     def summaries(self, states: state.SimState) -> list:
-        """Per-point summaries.  Per-flow results (fct/goodput/trims) are
-        exact; time-integral fields (``ticks``, ``q_mean``) reflect the
-        grid's *shared* run length — all points tick until the slowest
-        finishes — so compare those across points, not against standalone
-        runs."""
+        """Per-point summaries.  Each point ran under its own exit gate,
+        so per-point time fields (``ticks``, ``q_mean``) are exactly the
+        standalone run's — directly comparable across points and against
+        standalone runs."""
         return summarize_batch(self.sim, states)
 
 
@@ -109,56 +83,8 @@ def build_sweep(cfg: state.SimConfig, wl,
                 points: Sequence[Mapping[str, float]]) -> Sweep:
     if not points:
         raise ValueError("empty sweep")
-    sim = engine.build(cfg, wl)
-    # derive() is re-run per point: that repeats the O(NF) structural host
-    # loops, but keeps a single source of truth for Consts derivation.
-    # Host-side cost is negligible next to the device run; identical leaves
-    # are deduplicated below.
-    consts_list = [sim.consts if not pt else
-                   state.derive(apply_point(cfg, pt), wl)[3] for pt in points]
-
-    flats, treedef = zip(*[jax.tree_util.tree_flatten(c) for c in consts_list])
-    if any(td != treedef[0] for td in treedef[1:]):
-        raise ValueError("sweep points disagree on Consts structure")
-    leaves, axes_leaves = [], []
-    for slot in zip(*flats):
-        x0 = np.asarray(slot[0])
-        if all(np.array_equal(np.asarray(x), x0) for x in slot[1:]):
-            leaves.append(slot[0])
-            axes_leaves.append(None)
-        else:
-            leaves.append(jnp.stack([jnp.asarray(x) for x in slot]))
-            axes_leaves.append(0)
-    consts_b = jax.tree_util.tree_unflatten(treedef[0], leaves)
-    axes = jax.tree_util.tree_unflatten(treedef[0], axes_leaves)
-    return Sweep(sim=sim, points=tuple(dict(p) for p in points),
-                 consts_b=consts_b, axes=axes)
-
-
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4), donate_argnums=(6,))
-def _run_sweep(step_fn, horizon_fn, axes, max_ticks, superstep, consts_b,
-               states):
-    """Superstep-fused sweep loop: the all-done exit reduction (over flows
-    *and* grid points) runs once per ``superstep`` ticks; each fused tick
-    is gated on the same scalar predicate so trajectories stay bit-for-bit
-    identical to the per-tick loop (engine.py run-loop contract).  With
-    ``horizon_fn`` the loop also time-leaps by the min next-event distance
-    over the grid (each point's horizon is computed under its own swept
-    ``Consts``), per the engine's batched-leap contract."""
-    vstep = jax.vmap(step_fn, in_axes=(axes, 0))
-
-    def cond(st):
-        return (st.now[0] < max_ticks) & ~jnp.all(st.done)
-
-    def body(st):
-        return vstep(consts_b, st)
-
-    leap = None
-    if horizon_fn is not None:
-        vhorizon = jax.vmap(horizon_fn, in_axes=(axes, 0))
-        leap = engine._leap_batched(lambda st: vhorizon(consts_b, st),
-                                    max_ticks)
-    return engine._superstep_loop(body, cond, superstep, leap)(states)
+    sc = Scenario(name=getattr(wl, "name", "sweep"), cfg=cfg, wl=wl)
+    return Sweep(study=api.study(sc, points=points))
 
 
 def summarize_batch(sim: engine.Sim, states: state.SimState) -> list:

@@ -10,6 +10,11 @@ A workload is a static flow table.  ``window`` implements the paper's
 windowed alltoall (Sec. 4.5): a sender's flow with per-sender order index j
 becomes eligible only while fewer than ``window`` of its predecessors are
 unfinished, keeping k flows active per node at all times.
+
+``Workload.validate()`` sanity-checks a table (self-flows, sizes, start
+ticks, node bounds, window/order consistency) with actionable errors;
+``state.derive`` calls it before any shape math, so hand-built tables
+fail fast instead of deep inside tracing.
 """
 
 from __future__ import annotations
@@ -34,6 +39,90 @@ class Workload:
     @property
     def n_flows(self) -> int:
         return int(self.src.shape[0])
+
+    def validate(self, n_nodes: int | None = None) -> "Workload":
+        """Check the flow table before it reaches tracing.
+
+        ``state.derive`` calls this with the topology's node count; call
+        it directly after hand-building a table.  Raises ``ValueError``
+        with the offending flow indices — a bad table otherwise fails
+        deep inside jit tracing with a shape or gather error.  Returns
+        ``self`` so construction can chain.
+        """
+        fields = {"src": self.src, "dst": self.dst, "size": self.size,
+                  "t_start": self.t_start, "order": self.order}
+        for key, arr in fields.items():
+            a = np.asarray(arr)
+            if a.ndim != 1:
+                raise ValueError(
+                    f"workload {self.name!r}: field {key!r} must be 1-D "
+                    f"[n_flows], got shape {a.shape}")
+            if a.shape[0] != self.src.shape[0]:
+                raise ValueError(
+                    f"workload {self.name!r}: field {key!r} has "
+                    f"{a.shape[0]} entries but src has {self.src.shape[0]}; "
+                    f"all flow-table columns must align")
+        if self.n_flows == 0:
+            raise ValueError(
+                f"workload {self.name!r}: empty flow table (the engine "
+                f"needs at least one flow)")
+
+        def _idx(mask):
+            return np.flatnonzero(mask)[:8].tolist()
+
+        self_talk = self.src == self.dst
+        if np.any(self_talk):
+            raise ValueError(
+                f"workload {self.name!r}: flows {_idx(self_talk)} have "
+                f"src == dst (a node cannot send to itself); fix the "
+                f"traffic table")
+        bad_size = self.size <= 0
+        if np.any(bad_size):
+            raise ValueError(
+                f"workload {self.name!r}: flows {_idx(bad_size)} have "
+                f"non-positive size; every flow must move >= 1 byte")
+        bad_start = self.t_start < 0
+        if np.any(bad_start):
+            raise ValueError(
+                f"workload {self.name!r}: flows {_idx(bad_start)} have "
+                f"negative t_start; start ticks must be >= 0")
+        oob = (self.src < 0) | (self.dst < 0)
+        if n_nodes is not None:
+            oob |= (self.src >= n_nodes) | (self.dst >= n_nodes)
+        if np.any(oob):
+            bound = f"[0, {n_nodes})" if n_nodes is not None else ">= 0"
+            raise ValueError(
+                f"workload {self.name!r}: flows {_idx(oob)} reference "
+                f"nodes outside {bound}; the workload was built for a "
+                f"different topology")
+        # Windowing admits a sender's flows in `order`: a flow becomes
+        # eligible once fewer than `window` of its order-predecessors are
+        # unfinished.  If a window-gated flow (order index >= window —
+        # earlier ones can never accumulate `window` unfinished
+        # predecessors) starts *earlier* than a predecessor, the window
+        # would hold it past its own start time — almost always a
+        # mis-built table, so reject it for every sender the window can
+        # actually gate (more flows than `window`).
+        if self.window >= self.n_flows:      # windowing can't gate anyone
+            return self
+        senders, counts = np.unique(self.src, return_counts=True)
+        for s in senders[counts > self.window]:
+            f = np.flatnonzero(self.src == s)
+            f = f[np.argsort(self.order[f], kind="stable")]
+            drop = np.diff(self.t_start[f]) < 0
+            drop[:max(self.window - 1, 0)] = False   # later flow ungated
+            if np.any(drop):
+                j = int(np.flatnonzero(drop)[0])
+                raise ValueError(
+                    f"workload {self.name!r}: windowed sender {int(s)} "
+                    f"has t_start decreasing along its `order` (flow "
+                    f"{int(f[j + 1])} starts at "
+                    f"{int(self.t_start[f[j + 1]])} < flow {int(f[j])} "
+                    f"at {int(self.t_start[f[j]])}); sort t_start to "
+                    f"match `order` (or widen `window`) so the "
+                    f"eligibility window never blocks a flow past its "
+                    f"start tick")
+        return self
 
 
 def incast(tree: FatTreeConfig, degree: int, size_bytes: int, receiver: int = 0,

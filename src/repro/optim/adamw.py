@@ -1,7 +1,7 @@
 """AdamW with memory-tiering for 100B+ models on 16 GB/chip:
 
 * moment dtype is configurable (fp32 / bf16) — jamba-398b needs bf16
-  moments to fit (DESIGN.md Sec. 7);
+  moments to fit (DESIGN.md Sec. 8);
 * optional fp32 master copy of bf16 params;
 * ZeRO-1: a helper that extends parameter PartitionSpecs with the ``data``
   axis for optimizer state, so moments/master shard over data parallel

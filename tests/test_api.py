@@ -1,0 +1,213 @@
+"""Experiment API (DESIGN.md Sec. 7): the declarative Scenario/Study
+entry point must lower a {point x seed} grid onto ONE compiled step while
+keeping every lane bit-for-bit equal to its standalone execution — and
+the legacy entry points (``engine.build(...).run``, ``build_sweep``) must
+stay exact wrappers over the same machinery."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.netsim import api, engine, scenarios, state, workloads
+from repro.netsim.api import apply_point
+from repro.netsim.scenarios import Scenario, scenario
+from repro.netsim.state import SimConfig
+from repro.netsim.sweep import build_sweep
+from repro.netsim.units import FatTreeConfig, LinkConfig
+
+TREE = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=2)
+LINK = LinkConfig()
+
+POINTS = ({}, {"start_cwnd_mult": 0.5}, {"rto_mult": 5.0},
+          {"start_cwnd_mult": 0.75, "react_every": 4})
+SEEDS = (0, 1, 2, 3)
+MAX_TICKS = 30_000
+
+
+def _scenario(leap=True, **cfg_kw) -> Scenario:
+    wl = workloads.incast(TREE, degree=4, size_bytes=32 * 4096, seed=1)
+    return Scenario(name="t_incast4",
+                    cfg=SimConfig(link=LINK, tree=TREE, leap=leap, **cfg_kw),
+                    wl=wl, max_ticks=MAX_TICKS)
+
+
+def _assert_state_equal(st_a, st_b):
+    la, lb = jax.tree.leaves(st_a), jax.tree.leaves(st_b)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _lane(states, i):
+    return jax.tree.map(lambda x: x[i], states)
+
+
+# --------------------------------------------------------------------------
+# acceptance: one compile, per-lane bitwise equivalence (leap on and off)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("leap", [True, False])
+def test_study_one_compile_and_lanes_match_standalone(leap):
+    """A >=4-point x >=4-seed Study compiles exactly one step, and every
+    lane's final state equals the standalone ``Sim.run`` of that
+    (point, seed) across the FULL SimState pytree — ``now``, metrics
+    counters, and RTT histograms included."""
+    sc = _scenario(leap=leap)
+    st_obj = api.study(sc, points=POINTS, seeds=SEEDS)
+    assert st_obj.n_lanes == len(POINTS) * len(SEEDS)
+
+    before = engine.STEP_TRACE_COUNT[0]
+    res = st_obj.run()
+    assert engine.STEP_TRACE_COUNT[0] - before == 1
+
+    for pi, pt in enumerate(POINTS):
+        cfg_i = apply_point(sc.cfg, pt)
+        sim_i = engine.build(cfg_i, sc.wl)
+        assert sim_i.dims.leap == leap
+        for si, seed in enumerate(SEEDS):
+            st_i = sim_i.run(max_ticks=MAX_TICKS, seed=seed)
+            _assert_state_equal(st_i,
+                                _lane(res.states, pi * len(SEEDS) + si))
+            # the typed lane result reflects the same run
+            r = res.lane(pi, si)
+            assert r.seed == seed and dict(r.point) == pt
+            assert r.ticks == int(st_i.now)
+            np.testing.assert_array_equal(r.fct, np.asarray(st_i.fct))
+
+
+def test_build_sweep_lanes_match_study():
+    """Compatibility wrapper: ``build_sweep`` runs the same lane loop, so
+    its [P] states are bit-identical to the seed-0 lanes of a Study over
+    the same points (and therefore to standalone builds)."""
+    sc = _scenario()
+    states_sweep = build_sweep(sc.cfg, sc.wl, list(POINTS)).run(
+        max_ticks=MAX_TICKS)
+    res = api.study(sc, points=POINTS, seeds=(0, 1)).run()
+    for pi in range(len(POINTS)):
+        _assert_state_equal(_lane(states_sweep, pi),
+                            _lane(res.states, pi * 2))
+
+
+def test_run_batch_matches_study_seed_lanes():
+    """Compatibility wrapper: ``Sim.run_batch`` is the seeds-only Study —
+    bit-identical states, including per-lane ``now``."""
+    sc = _scenario()
+    sim = engine.build(sc.cfg, sc.wl)
+    stb = sim.run_batch(np.asarray(SEEDS), max_ticks=MAX_TICKS)
+    res = api.study(sc, seeds=SEEDS).run()
+    _assert_state_equal(stb, res.states)
+    for si, seed in enumerate(SEEDS):
+        st_i = sim.run(max_ticks=MAX_TICKS, seed=seed)
+        _assert_state_equal(st_i, _lane(stb, si))
+
+
+def test_study_single_init_trace():
+    """The [P*S] lane batch comes from ONE vmapped init_state trace."""
+    st_obj = api.study(_scenario(), points=POINTS, seeds=SEEDS)
+    before = state.INIT_TRACE_COUNT[0]
+    states = st_obj.init()
+    assert state.INIT_TRACE_COUNT[0] - before == 1
+    np.testing.assert_array_equal(
+        np.asarray(states.salt), np.tile(SEEDS, len(POINTS)))
+
+
+# --------------------------------------------------------------------------
+# planner validation
+# --------------------------------------------------------------------------
+
+
+def test_study_rejects_dims_changing_and_unknown_keys():
+    sc = _scenario()
+    with pytest.raises(KeyError, match="changes Dims"):
+        api.study(sc, points=[{"superstep": 4}])
+    with pytest.raises(KeyError, match="changes Dims"):
+        api.study(sc, points=[{"trimming": 0.0}])
+    with pytest.raises(KeyError, match="unsweepable"):
+        api.study(sc, points=[{"quantum_entanglement": 1.0}])
+    with pytest.raises(ValueError, match="empty sweep"):
+        api.study(sc, points=[])
+    with pytest.raises(ValueError, match="empty seeds"):
+        api.study(sc, seeds=[])
+
+
+def test_study_validates_workload_up_front():
+    """A bad flow table fails at plan time with an actionable message,
+    not deep inside tracing."""
+    bad = workloads.Workload(
+        name="bad", src=np.array([0, 1], np.int32),
+        dst=np.array([0, 2], np.int32),          # flow 0: src == dst
+        size=np.array([4096, 4096], np.int32),
+        t_start=np.zeros(2, np.int32), order=np.zeros(2, np.int32))
+    sc = dataclasses.replace(_scenario(), wl=bad)
+    with pytest.raises(ValueError, match="src == dst"):
+        api.study(sc)
+    with pytest.raises(ValueError, match="src == dst"):
+        api.run(sc)
+
+
+# --------------------------------------------------------------------------
+# scenario registry
+# --------------------------------------------------------------------------
+
+
+def test_scenario_registry_resolves_and_overrides():
+    names = scenarios.names()
+    assert {"incast8_32n", "perm64", "sparse_heavy_32n",
+            "tiny_incast3"} <= set(names)
+    sc = scenario("tiny_incast3", algo="swift", max_ticks=12_345)
+    assert sc.cfg.algo == "swift" and sc.max_ticks == 12_345
+    assert sc.name == "tiny_incast3"
+    # aliases resolve to the same catalogue entry
+    assert scenario("perm_64n").name == "perm64"
+    with pytest.raises(KeyError, match="tiny_incast3"):
+        scenario("no_such_scenario")
+
+
+def test_api_accepts_scenario_names():
+    r = api.run("tiny_incast3")
+    assert r.scenario == "tiny_incast3" and r.all_done
+    res = api.study("tiny_incast3",
+                    points=[{"start_cwnd_mult": a} for a in (0.5, 1.0)],
+                    seeds=(0, 1)).run()
+    assert len(res) == 4 and all(rr.all_done for rr in res)
+
+
+# --------------------------------------------------------------------------
+# typed results
+# --------------------------------------------------------------------------
+
+
+def test_run_result_derived_fields():
+    r = api.run("tiny_incast3")
+    assert r.all_done and r.n_done == r.n_flows
+    assert r.completion == int(r.fct_done.max())
+    assert 0.0 < r.jain <= 1.0
+    assert r.fct_min <= r.fct_mean <= r.fct_p99 <= r.completion
+    # slowdown vs the uncongested ideal: >= ~1 for every finished flow
+    assert np.nanmin(r.slowdown) > 0.9
+    assert r.slowdown_p99 >= r.slowdown_mean > 0
+    s = r.summary()
+    assert s["fct_max"] == r.completion and s["trims"] == r.trims
+
+
+def test_study_result_rows_are_point_major_and_tidy():
+    points = [{"start_cwnd_mult": a} for a in (0.5, 1.0, 1.25)]
+    seeds = (0, 7)
+    res = api.study("tiny_incast3", points=points, seeds=seeds).run()
+    rows = res.rows()
+    assert len(rows) == len(points) * len(seeds)
+    for pi, pt in enumerate(points):
+        for si, seed in enumerate(seeds):
+            row = rows[pi * len(seeds) + si]
+            assert row["point"] == pt and row["seed"] == seed
+            assert row["scenario"] == "tiny_incast3"
+            assert {"name", "completion", "jain", "slowdown_p99",
+                    "trims", "ticks"} <= set(row)
+    # lane() indexes the same grid
+    assert res.lane(2, 1).seed == 7
+    assert dict(res.lane(2, 1).point) == points[2]
+    best = res.best("completion")
+    assert best.completion == min(r.completion for r in res)

@@ -139,9 +139,10 @@ def test_leap_forced_off_for_paced_and_plb():
     assert build(SimConfig(link=LINK, tree=TREE, leap=True), wl).dims.leap
 
 
-def test_leap_run_batch_min_over_batch():
-    """Batched lanes share `now`, so the loop leaps by the min horizon
-    over the batch; every lane must still match its leap-off twin."""
+def test_leap_run_batch_per_lane_horizons():
+    """Batched lanes leap independently (each by its own horizon, frozen
+    once done — api._run_lanes); every lane must match its leap-off
+    twin bit-for-bit."""
     wl = workloads.heavy_tailed(OVERSUB, 8, size_base=4 * 4096,
                                 size_cap=64 * 4096, gap_mean=900.0, seed=7)
     sim_on = build(SimConfig(link=LINK, tree=OVERSUB, leap=True), wl)
@@ -165,7 +166,8 @@ def test_run_batch_builds_one_init_and_broadcasts():
 
 def test_leap_sweep_per_point_horizons():
     """The sweep leap evaluates each grid point's horizon under its own
-    swept Consts (different RTOs / start windows!) and jumps by the min."""
+    swept Consts (different RTOs / start windows!) and each lane jumps by
+    its own distance (api._run_lanes)."""
     wl = workloads.incast(TREE, degree=4, size_bytes=32 * 4096, seed=1)
     points = [{"start_cwnd_mult": a, "rto_mult": r}
               for a, r in ((0.5, 3.0), (1.25, 5.0))]

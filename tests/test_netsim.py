@@ -1,12 +1,15 @@
 """Netsim integration tests: timing exactness, conservation, and the
-paper's qualitative claims at reduced scale."""
+paper's qualitative claims at reduced scale.  Runs go through the
+experiment API (``api.run`` -> ``RunResult``; its ``summary()`` keeps
+the historical ``metrics.summarize`` dict shape)."""
 
 import numpy as np
 import pytest
 
+from repro.netsim import api, workloads
 from repro.netsim.engine import SimConfig, build, jain_fairness, summarize
+from repro.netsim.scenarios import Scenario
 from repro.netsim.units import FatTreeConfig, LinkConfig, derive_timing
-from repro.netsim import workloads
 
 LINK = LinkConfig()
 SMALL = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=4)   # non-blocking
@@ -15,11 +18,10 @@ OVERSUB = FatTreeConfig(racks=2, nodes_per_rack=8, uplinks=2)  # 4:1
 
 def run(tree, wl, **kw):
     max_ticks = kw.pop("max_ticks", 60000)
-    cfg = SimConfig(link=LINK, tree=tree, **kw)
-    sim = build(cfg, wl)
-    st = sim.run(max_ticks=max_ticks)
-    st.now.block_until_ready()
-    return sim, st, summarize(sim, st)
+    sc = Scenario(name=wl.name, cfg=SimConfig(link=LINK, tree=tree, **kw),
+                  wl=wl, max_ticks=max_ticks)
+    r = api.run(sc)
+    return r, r.state, r.summary()
 
 
 def test_empty_network_rtt_equals_brtt():

@@ -62,3 +62,35 @@ def test_apply_point_routes_cc_keys_into_overrides():
     cfg = apply_point(CFG, {"fd": 0.5, "start_cwnd_mult": 0.7})
     assert ("fd", 0.5) in cfg.cc_overrides
     assert cfg.start_cwnd_mult == 0.7
+
+
+def test_apply_point_unknown_key_names_the_valid_ones():
+    with pytest.raises(KeyError, match="unsweepable key 'bogus'") as ei:
+        apply_point(CFG, {"bogus": 1.0})
+    assert "start_cwnd_mult" in str(ei.value)      # actionable: lists keys
+
+
+@pytest.mark.parametrize("key", ["superstep", "leap", "trimming",
+                                 "cc_backend", "lb", "tree"])
+def test_apply_point_dims_changing_key_raises(key):
+    """Keys that change Dims (shapes/branch selectors) cannot ride one
+    compiled step; the error says to build one Scenario per value."""
+    with pytest.raises(KeyError, match="changes Dims"):
+        apply_point(CFG, {key: 1})
+
+
+def test_summaries_rows_line_up_with_points_order():
+    """Sweep.summaries must return rows in ``points`` order: row i is the
+    summary of the standalone build of points[i]."""
+    points = [{"start_cwnd_mult": a} for a in (1.25, 0.5, 1.0)]   # shuffled
+    wl = _wl()
+    sw = build_sweep(CFG, wl, points)
+    rows = sw.summaries(sw.run(max_ticks=30000))
+    assert [dict(p) for p in sw.points] == points
+    for i, pt in enumerate(points):
+        st_i = engine.build(apply_point(CFG, pt), wl).run(max_ticks=30000)
+        np.testing.assert_array_equal(rows[i]["fct_ticks"],
+                                      np.asarray(st_i.fct))
+        assert rows[i]["ticks"] == int(st_i.now)
+    # the swept knob actually distinguishes the rows
+    assert len({r["fct_max"] for r in rows}) > 1

@@ -128,6 +128,96 @@ def test_heavy_tailed_seed_reproducible():
     assert not np.array_equal(a.size, c.size)
 
 
+# -------------------------------------------------------------- validate
+
+
+def _table(**overrides):
+    base = dict(
+        name="t", src=np.array([0, 1, 2], np.int32),
+        dst=np.array([4, 5, 6], np.int32),
+        size=np.array([4096, 8192, 4096], np.int32),
+        t_start=np.array([0, 10, 20], np.int32),
+        order=np.zeros(3, np.int32))
+    base.update(overrides)
+    return workloads.Workload(**base)
+
+
+def test_validate_accepts_good_tables_and_chains():
+    wl = _table()
+    assert wl.validate(n_nodes=SMALL.n_nodes) is wl
+    # every generator in this module produces a valid table
+    for gen in (workloads.incast(SMALL, degree=4, size_bytes=4096),
+                workloads.permutation(SMALL, size_bytes=4096),
+                workloads.alltoall(SMALL, size_bytes=4096, window=2, nodes=4),
+                workloads.heavy_tailed(SMALL, 8),
+                workloads.staggered_large(SMALL, 3, 4096, 100)):
+        gen.validate(n_nodes=SMALL.n_nodes)
+
+
+def test_validate_rejects_self_talk_with_flow_index():
+    wl = _table(dst=np.array([4, 1, 6], np.int32))       # flow 1: src == dst
+    with pytest.raises(ValueError, match=r"\[1\].*src == dst"):
+        wl.validate()
+
+
+def test_validate_rejects_bad_sizes_and_starts():
+    with pytest.raises(ValueError, match="non-positive size"):
+        _table(size=np.array([4096, 0, 4096], np.int32)).validate()
+    with pytest.raises(ValueError, match="negative t_start"):
+        _table(t_start=np.array([0, -5, 20], np.int32)).validate()
+
+
+def test_validate_rejects_out_of_range_nodes():
+    with pytest.raises(ValueError, match="different topology"):
+        _table(dst=np.array([4, 5, 99], np.int32)).validate(n_nodes=8)
+    with pytest.raises(ValueError, match="different topology"):
+        _table(src=np.array([-1, 1, 2], np.int32)).validate()
+
+
+def test_validate_rejects_misaligned_and_empty_tables():
+    with pytest.raises(ValueError, match="must align"):
+        _table(size=np.array([4096, 4096], np.int32)).validate()
+    with pytest.raises(ValueError, match="empty flow table"):
+        _table(src=np.zeros(0, np.int32), dst=np.zeros(0, np.int32),
+               size=np.zeros(0, np.int32), t_start=np.zeros(0, np.int32),
+               order=np.zeros(0, np.int32)).validate()
+
+
+def test_validate_rejects_windowed_start_order_mismatch():
+    """With an active eligibility window, a later-ordered flow that starts
+    earlier than its predecessor would sit blocked past its start tick —
+    reject with the offending sender/flows named."""
+    wl = _table(src=np.array([0, 0, 0], np.int32),
+                dst=np.array([4, 5, 6], np.int32),
+                t_start=np.array([0, 20, 10], np.int32),
+                order=np.array([0, 1, 2], np.int32), window=2)
+    with pytest.raises(ValueError, match="windowed sender 0"):
+        wl.validate()
+    # same table without windowing is fine (start order is free)
+    _table(src=np.array([0, 0, 0], np.int32),
+           t_start=np.array([0, 20, 10], np.int32),
+           order=np.array([0, 1, 2], np.int32)).validate()
+    # a decrease among a sender's first `window` flows is fine — those
+    # can never accumulate `window` unfinished predecessors
+    _table(src=np.array([0, 0, 0], np.int32),
+           t_start=np.array([20, 10, 30], np.int32),
+           order=np.array([0, 1, 2], np.int32), window=2).validate()
+    # a sender the window cannot gate (<= window flows) may start in any
+    # order, even while another sender's flow count activates windowing
+    workloads.Workload(
+        name="t", src=np.array([0, 0, 0, 1, 1], np.int32),
+        dst=np.array([4, 5, 6, 7, 4], np.int32),
+        size=np.full(5, 4096, np.int32),
+        t_start=np.array([0, 10, 20, 30, 5], np.int32),
+        order=np.array([0, 1, 2, 0, 1], np.int32), window=2).validate()
+
+
+def test_engine_rejects_invalid_workload_via_derive():
+    wl = _table(dst=np.array([0, 5, 6], np.int32))       # flow 0: src == dst
+    with pytest.raises(ValueError, match="src == dst"):
+        build(SimConfig(link=LINK, tree=SMALL), wl)
+
+
 def test_staggered_large_disjoint_and_spaced():
     wl = workloads.staggered_large(SMALL, 4, 64 * 4096, gap_ticks=1000,
                                    seed=0)
