@@ -59,10 +59,10 @@ def _departures(dims, consts, st):
     d_ecn = d_ecn | (mark & active).astype(I32)
     black = consts.dead[qidx] & active & in_fault
     emit = active & ~black
-    next_q = fabric.route_from_queue(dims, consts, d_flow)
+    next_q = fabric.route_from_queue(dims, consts, d_flow, d_ent)
     q_head = st.q_head.at[:NQ].set(jnp.where(active, (head + 1) % CAP, head))
     q_size = st.q_size.at[:NQ].add(-active.astype(I32))
-    B = 2 * dims.PU
+    B = dims.QE
     lat = jnp.where(qidx < B, consts.lat_core, consts.lat_edge)
     slot = jnp.where(emit, (t + lat) % L, L)          # L = dropped
     payload = jnp.stack(

@@ -79,6 +79,17 @@ def leap_scenarios(quick: bool):
     return ["sparse_heavy_32n", "sparse_large_32n"]
 
 
+def tier3_scenarios(quick: bool):
+    """Three-tier (core-plane) scenarios: the paper-scale fabrics.  Big
+    per-tick working sets (512 nodes, ~1.8k emitters), so they run the
+    production superstep only (plus the legacy k1 baseline) rather than
+    the whole superstep ladder."""
+    if quick:
+        return ["tiny_3t"]
+    return ["perm_512n_3t", "incast_256x1_3t", "alltoall_3t",
+            "perm_512n_3t_degraded"]
+
+
 def superstep_sizes(brtt: int, quick: bool):
     ks = [1, brtt] if quick else [1, 8, brtt, 2 * brtt]
     return sorted(set(ks))
@@ -102,12 +113,15 @@ def _measure(variants, reps):
     return walls, ticks
 
 
-def bench_scenario(name, backend, reps, quick):
+def bench_scenario(name, backend, reps, quick, ksizes=None):
     """Measure the ungated reference and every superstep size, interleaved.
     Returns one row dict per variant.  The k-variants run the *production
     default* engine config (time leaping included — a no-op jump on these
     dense scenarios beyond the per-superstep horizon cost); each row
-    records its ``leap`` flag so ledger comparisons are labeled."""
+    records its ``leap`` flag so ledger comparisons are labeled.
+    ``ksizes`` overrides the measured superstep ladder: a list of sizes,
+    or ``"production"`` for just the auto size (one base RTT — the
+    three-tier rows measure only that)."""
     sc = scenario(name, cc_backend=backend)
     max_ticks = sc.max_ticks
     base_sim = sc.build()
@@ -115,7 +129,10 @@ def bench_scenario(name, backend, reps, quick):
     # ungated one-tick-per-iteration while loop (see benchmarks/legacy.py)
     variants = {"k1_ungated": _legacy_baseline(sc.cfg, sc.wl, max_ticks)}
     sims = {}
-    ksizes = superstep_sizes(base_sim.dims.brtt_inter, quick)
+    if ksizes is None:
+        ksizes = superstep_sizes(base_sim.dims.brtt_inter, quick)
+    elif ksizes == "production":
+        ksizes = [base_sim.dims.brtt_inter]
     for k in ksizes:
         sim = sc.with_(superstep=k).build()
         sims[f"k{k}"] = sim
@@ -180,19 +197,33 @@ def main(argv=None) -> None:
                    help="timing repetitions per variant (best-of)")
     p.add_argument("--backends", default=None,
                    help="comma-separated override, e.g. 'jnp'")
+    p.add_argument("--only", default=None, metavar="NAMES",
+                   help="comma-separated scenario-name filter (applies to "
+                        "the dense, leap, and three-tier lists)")
     args = p.parse_args(argv)
     reps = args.reps or (2 if args.quick else 4)
+    only = set(args.only.split(",")) if args.only else None
+
+    def picked(name):
+        return only is None or name in only
 
     t0 = time.time()
     print("name,us_per_call,derived")
     rows = []
     for name, backends in scenarios(args.quick):
+        if not picked(name):
+            continue
         if args.backends:
             backends = [b for b in args.backends.split(",") if b]
         for backend in backends:
             rows.extend(bench_scenario(name, backend, reps, args.quick))
     for name in leap_scenarios(args.quick):
-        rows.extend(bench_leap_scenario(name, min(reps, 2)))
+        if picked(name):
+            rows.extend(bench_leap_scenario(name, min(reps, 2)))
+    for name in tier3_scenarios(args.quick):
+        if picked(name):
+            rows.extend(bench_scenario(name, "jnp", min(reps, 2),
+                                       args.quick, ksizes="production"))
     path = write_bench_json(
         "perf", rows, path=args.json_path,
         meta=dict(quick=bool(args.quick), reps=reps, jax=jax.__version__,

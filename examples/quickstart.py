@@ -20,17 +20,22 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller fabric/flows (CI smoke)")
+    ap.add_argument("--scenario", default=None, metavar="NAME",
+                    help="registered scenario to run instead of the "
+                         "default incast (e.g. tiny_3t for a three-tier "
+                         "smoke)")
     args = ap.parse_args()
 
     # registered scenarios are string-addressable; per-call overrides
     # (algo=, lb=, max_ticks=...) fork the frozen base Scenario
-    name = "incast8_16n" if args.quick else "incast8_32n"
+    name = args.scenario or ("incast8_16n" if args.quick else "incast8_32n")
     base = scenario(name)
     degree = base.wl.n_flows
     pkts = int(base.wl.size[0]) // base.cfg.link.mtu_bytes
 
-    print(f"{degree}:1 incast of {int(base.wl.size[0]) // 1024} KiB flows "
-          f"({base.cfg.tree.n_nodes} nodes) — scenario {name!r}")
+    tree = base.cfg.tree
+    print(f"{degree} flows of {int(base.wl.size[0]) // 1024} KiB "
+          f"({tree.n_nodes} nodes, {tree.tiers}-tier) — scenario {name!r}")
     print(f"{'algo':12s} {'FCT max':>9s} {'slowdown':>9s} {'fairness':>9s} "
           f"{'trims':>6s} {'completion':>12s}")
     for algo in ("smartt", "swift", "mprdma", "eqds"):

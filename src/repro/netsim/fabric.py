@@ -24,35 +24,53 @@ import jax.numpy as jnp
 
 from repro.netsim import hashing
 from repro.netsim.state import HORIZON_INF, Consts, Dims, SimState, pkt_size
-from repro.netsim.topology import KIND_T0_UP, KIND_T1_DOWN
 
 I32 = jnp.int32
 F32 = jnp.float32
 
 
-def route_from_queue(dims: Dims, consts: Consts, flow):
-    """Next queue for the packet departing each fabric port (``flow`` is
-    [NQ], one head-of-line flow per port; negative ids encode delivery to
-    node -(id+1)).  Port kind/aux come from the hoisted ``Consts`` slices."""
+def route_switch(dims: Dims, consts: Consts, sw, d, ent):
+    """Table-driven next hop at switch ``sw`` for a packet to node ``d``
+    carrying path entropy ``ent`` (all broadcastable arrays).
+
+    *Down* when ``d`` lies in the switch's subtree interval: one gather
+    from the per-switch down-port table.  *Up* otherwise: an ECMP hash of
+    the entropy with the per-switch salt selects among the switch's
+    contiguous run of equal-cost up ports — at the T0 tier that picks the
+    spine/agg, at the T1 tier of a three-tier tree the same hash (a
+    different salt) picks the core path (paper Sec. 3.6)."""
+    down = (d >= consts.sw_lo[sw]) & (d < consts.sw_hi[sw])
+    cnt = consts.sw_up_cnt[sw]
+    h = (hashing.hash2(ent.astype(jnp.uint32), consts.sw_salt[sw])
+         % jnp.maximum(cnt, 1).astype(jnp.uint32)).astype(I32)
+    return jnp.where(down, consts.down_tbl[sw, d], consts.sw_up_base[sw] + h)
+
+
+def route_from_queue(dims: Dims, consts: Consts, flow, ent):
+    """Next queue for the packet departing each fabric port (``flow`` /
+    ``ent`` are [NQ], one head-of-line packet per port; negative ids encode
+    delivery to node -(id+1)).  Each port's wire feeds the switch
+    ``consts.nbr_q`` names; the last N ports (``consts.edge_q``) feed host
+    NICs and deliver."""
     d = consts.dst[jnp.clip(flow, 0, dims.NF - 1)]
-    drack = d // dims.M
-    k, ax = consts.kind_q, consts.aux_q
-    r_up = dims.PU + ax * dims.P + drack    # t0_up -> t1_down[spine, drack]
-    r_t1 = 2 * dims.PU + d                  # t1_down -> t0_down[dst]
-    r_del = -(d + 1)                        # t0_down -> deliver
-    return jnp.where(k == KIND_T0_UP, r_up,
-                     jnp.where(k == KIND_T1_DOWN, r_t1, r_del))
+    nxt = route_switch(dims, consts, consts.nbr_q, d, ent)
+    return jnp.where(consts.edge_q, -(d + 1), nxt)
 
 
 def route_from_sender(dims: Dims, consts: Consts, f, ent):
-    """First queue for a fresh packet of flow ``f`` carrying entropy ``ent``
-    (ECMP uplink hash, same-rack shortcut)."""
-    sr = consts.src[f] // dims.M
-    d = consts.dst[f]
-    h = (hashing.hash2(ent.astype(jnp.uint32),
-                       (sr * 0x9E37 + 0x1234).astype(jnp.uint32))
-         % jnp.uint32(dims.U)).astype(I32)
-    return jnp.where(d // dims.M == sr, 2 * dims.PU + d, sr * dims.U + h)
+    """First queue for a fresh packet of flow ``f`` carrying entropy
+    ``ent``: the routing decision of the sender's rack switch (same-rack
+    shortcut straight to the edge port, ECMP uplink hash otherwise)."""
+    return route_switch(dims, consts, consts.src[f] // dims.M,
+                        consts.dst[f], ent)
+
+
+def route_step(dims: Dims, consts: Consts, q, d, ent):
+    """Next queue after departing port ``q`` toward node ``d`` — the
+    single-port form of :func:`route_from_queue` (tests/tools walk paths
+    with it; the tick itself uses the all-ports form)."""
+    nxt = route_switch(dims, consts, consts.nbr_q[q], d, ent)
+    return jnp.where(consts.edge_q[q], -(d + 1), nxt)
 
 
 def departures(dims: Dims, consts: Consts, st: SimState) -> SimState:
@@ -60,7 +78,7 @@ def departures(dims: Dims, consts: Consts, st: SimState) -> SimState:
     t = st.now
     m = st.m
     NQ, CAP, L = dims.NQ, dims.CAP, dims.L
-    B = 2 * dims.PU                                   # core/edge port split
+    B = dims.QE                                       # core/edge port split
 
     qidx = consts.qidx
     in_fault = t >= consts.fault_start
@@ -78,15 +96,15 @@ def departures(dims: Dims, consts: Consts, st: SimState) -> SimState:
     d_ecn = d_ecn | (mark & active).astype(I32)
     black = consts.dead[qidx] & active & in_fault
     emit = active & ~black
-    next_q = route_from_queue(dims, consts, d_flow)
+    next_q = route_from_queue(dims, consts, d_flow, d_ent)
     q_head = st.q_head.at[:NQ].set(jnp.where(active, (head + 1) % CAP, head))
     q_size = st.q_size.at[:NQ].add(-active.astype(I32))
     payload = jnp.where(emit[:, None], jnp.stack(
         [emit.astype(I32), next_q, d_flow, d_seq, d_ent, d_ecn, d_ts],
         axis=1), 0)
     # Wire placement as two dynamic-update-slices, not a scatter: latency
-    # is uniform within the core ports ([0, 2PU): t0_up + t1_down) and the
-    # edge ports ([2PU, NQ): t0_down), and each emitter's target slot
+    # is uniform within the switch-facing ports ([0, QE): every up/down
+    # tier) and the edge ports ([QE, NQ): t0_down), and each emitter's target slot
     # (t + lat) % L holds nothing still live at tick t (only this emitter
     # writes its column, and whatever it wrote there last wrap landed
     # L - lat ticks ago) — so blanket-writing zeros for inactive ports is
@@ -115,10 +133,10 @@ def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
     enq = a_valid & (a_dstq >= 0)
 
     # ---- deliveries ----
-    # Only the t0_down ports (emitter rows [2PU, 2PU+N), one per node, in
+    # Only the t0_down ports (emitter rows [QE, QE+N), one per node, in
     # node order) can deliver, so the delivery path works on that N-row
     # slice: row i delivers to node i.
-    lo = 2 * dims.PU
+    lo = dims.QE
     darr = arr[lo:lo + N]
     deliver = (darr[:, 0] == 1) & (darr[:, 1] < 0)
     d_flow, d_seq, d_ent, d_ecn, d_ts = (darr[:, i] for i in range(2, 7))

@@ -41,6 +41,17 @@ TREE_FLAT = FatTreeConfig(racks=4, nodes_per_rack=8, uplinks=8)    # 32, 1:1
 TREE_16 = FatTreeConfig(racks=2, nodes_per_rack=8, uplinks=2)      # 16, 4:1
 TREE_TINY = FatTreeConfig(racks=2, nodes_per_rack=2, uplinks=2)    # 4 nodes
 
+# Three-tier fat trees (pods of racks + a T2 core plane) — the paper's
+# evaluation shape (Sec. 4: up to 1024 endpoints on a 3-tier oversubscribed
+# fat tree), scaled to CPU-tractable sizes.  Oversubscription is per tier:
+# T0 = nodes_per_rack/uplinks, T1 = racks_per_pod/core_uplinks.
+TREE_512_3T = FatTreeConfig(racks=64, nodes_per_rack=8, uplinks=4,
+                            pods=8, core_uplinks=4)   # 512 nodes, 2:1 x 2:1
+TREE_128_3T = FatTreeConfig(racks=16, nodes_per_rack=8, uplinks=2,
+                            pods=4, core_uplinks=2)   # 128 nodes, 4:1 x 2:1
+TREE_3T_TINY = FatTreeConfig(racks=4, nodes_per_rack=2, uplinks=2,
+                             pods=2, core_uplinks=2)  # 8 nodes, 1:1 x 1:1
+
 LINK = LinkConfig()
 
 
@@ -166,6 +177,36 @@ register("perm_16n", lambda: _std(
     "perm_16n", TREE_16,
     workloads.permutation(TREE_16, size_bytes=64 * 4096, seed=3),
     60_000))
+
+# three-tier scenarios (paper-scale fabrics; EXPERIMENTS.md "Three-tier
+# scenarios").  perm/incast/alltoall cross the T2 core; the degraded
+# variant injects core-link faults (dead t1_up uplink + half-rate t2_down).
+register("tiny_3t", lambda: _std(
+    "tiny_3t", TREE_3T_TINY,
+    workloads.permutation(TREE_3T_TINY, size_bytes=16 * KiB, seed=1),
+    20_000))
+register("perm_512n_3t", lambda: _std(
+    "perm_512n_3t", TREE_512_3T,
+    workloads.permutation(TREE_512_3T, size_bytes=256 * KiB, seed=7),
+    60_000))
+register("incast_256x1_3t", lambda: _std(
+    "incast_256x1_3t", TREE_512_3T,
+    workloads.incast(TREE_512_3T, degree=256, size_bytes=32 * KiB, seed=0),
+    60_000))
+register("alltoall_3t", lambda: _std(
+    "alltoall_3t", TREE_512_3T,
+    workloads.alltoall(TREE_512_3T, size_bytes=32 * KiB, window=4,
+                       nodes=32, spread=True),
+    200_000))
+register("perm_512n_3t_degraded", lambda: _std(
+    "perm_512n_3t_degraded", TREE_512_3T,
+    workloads.permutation(TREE_512_3T, size_bytes=256 * KiB, seed=7),
+    120_000).with_(faults=(("t1_up", 0, 0, 0), ("t2_down", 1, 2, 2)),
+                   fault_start=0))
+register("perm_128n_3t", lambda: _std(
+    "perm_128n_3t", TREE_128_3T,
+    workloads.permutation(TREE_128_3T, size_bytes=256 * KiB, seed=7),
+    120_000))
 
 # sparse/large-message scenarios (event-horizon leap targets, DESIGN 6.3)
 register("sparse_heavy_32n", lambda: _std(

@@ -29,8 +29,7 @@ import numpy as np
 from repro.core import registry, reps
 from repro.core.types import CCParams, CCState, init_cc_state, make_cc_params
 from repro.netsim.metrics import Metrics, init_metrics
-from repro.netsim.topology import (KIND_SENDER, KIND_T0_DOWN, KIND_T0_UP,
-                                   KIND_T1_DOWN, build_topology)
+from repro.netsim.topology import build_topology
 from repro.netsim.units import (FatTreeConfig, LinkConfig, Timing,
                                 derive_timing, gamma)
 from repro.netsim.workloads import Workload
@@ -96,9 +95,10 @@ class Dims(NamedTuple):
     FMAX: int       # max flows per sender
     FRMAX: int      # max flows per receiver
     P: int          # racks
-    U: int          # uplinks (spines)
+    U: int          # T0 uplinks per rack (spines / aggs-per-pod)
     M: int          # nodes per rack
-    PU: int         # P * U
+    QE: int         # edge-port base: queues [QE, NQ) are the t0_down ports
+    tiers: int      # 2 or 3 (FatTreeConfig.tiers)
     window: int     # windowed-alltoall eligibility window
     mtu: int        # bytes
     brtt_inter: int  # base RTT ticks == BDP packets
@@ -133,8 +133,6 @@ class Consts(NamedTuple):
     flows_of: jnp.ndarray        # i32 [N, FMAX] per-sender flow table
     slot_of: jnp.ndarray         # i32 [NF] flow's column in flows_of[src]
     flows_by_recv: jnp.ndarray   # i32 [N, FRMAX]
-    kind: jnp.ndarray            # i32 [NE] emitter kind
-    e_aux: jnp.ndarray           # i32 [NE] spine/rack/node auxiliary index
     lat_q: jnp.ndarray           # i32 [NE] post-departure wire latency
     service_period: jnp.ndarray  # i32 [NQ] degraded-link service period
     dead: jnp.ndarray            # bool [NQ]
@@ -153,9 +151,18 @@ class Consts(NamedTuple):
     eidx: jnp.ndarray            # i32 [NE] emitter iota
     flow_ids: jnp.ndarray        # i32 [NF] flow iota
     node_ids: jnp.ndarray        # i32 [N] node iota
-    kind_q: jnp.ndarray          # i32 [NQ] = kind[:NQ] (fabric ports only)
-    aux_q: jnp.ndarray           # i32 [NQ] = e_aux[:NQ]
-    lat_core: jnp.ndarray        # i32 scalar t0_up/t1_down wire latency
+    # -- table-driven routing (topology.build_topology; fabric.route_switch
+    #    gathers through these — tier-generic, no closed forms) --
+    nbr_q: jnp.ndarray           # i32 [NQ] switch each port's wire feeds
+                                 #   (edge rows clamped to 0; edge_q gates)
+    edge_q: jnp.ndarray          # bool [NQ] port delivers to a host NIC
+    sw_lo: jnp.ndarray           # i32 [NSW] switch subtree interval [lo, hi)
+    sw_hi: jnp.ndarray           # i32 [NSW]
+    sw_up_base: jnp.ndarray      # i32 [NSW] first equal-cost up port
+    sw_up_cnt: jnp.ndarray       # i32 [NSW] up-port count (0 at top tier)
+    sw_salt: jnp.ndarray         # u32 [NSW] per-switch ECMP hash salt
+    down_tbl: jnp.ndarray        # i32 [NSW, N] down port toward each node
+    lat_core: jnp.ndarray        # i32 scalar switch-facing-port wire latency
     lat_edge: jnp.ndarray        # i32 scalar t0_down wire latency
     lat_send: jnp.ndarray        # i32 scalar sender-NIC wire latency
     # -- next-event horizon invariants (DESIGN.md Sec. 6.3): slot iotas of
@@ -221,7 +228,7 @@ def derive(cfg: SimConfig, wl: Workload):
     """Map (config, workload) -> (Topology, Timing, Dims, Consts)."""
     link, tree = cfg.link, cfg.tree
     topo = build_topology(tree)
-    tm = derive_timing(link)
+    tm = derive_timing(link, tree)
 
     N, NQ, NE = tree.n_nodes, topo.n_queues, topo.n_emitters
     NF = wl.n_flows
@@ -237,6 +244,7 @@ def derive(cfg: SimConfig, wl: Workload):
     max_pkts = int(np.ceil(wl.size.max() / MTU))
     MAXW = (max_pkts + 31) // 32
     P, U, M = tree.racks, tree.uplinks, tree.nodes_per_rack
+    QE = NQ - N                                   # edge-port block base
 
     # ---- per-flow constants ----
     # ACK return delay is *globally constant*: the ack ring is indexed
@@ -244,9 +252,15 @@ def derive(cfg: SimConfig, wl: Workload):
     # tick, so slot (t + ret) % R belongs exclusively to the deliveries of
     # tick t — which lets `fabric.arrivals` write the whole [N]-row slot as
     # one dynamic-update-slice instead of a scatter.
-    inter = (wl.src // M) != (wl.dst // M)
-    brtt_f = np.where(inter, tm.brtt_inter,
-                      tm.fwd_intra + tm.ret_inter).astype(np.float32)
+    # Per-flow base RTT: hop-count-specific forward latency (same rack /
+    # cross-rack within a pod, which IS the longest path on two-tier trees
+    # / cross-core) plus the constant ACK return delay.
+    sr, dr = wl.src // M, wl.dst // M
+    Pg = tree.racks_per_pod
+    fwd_f = np.where(sr == dr, tm.fwd_intra,
+                     np.where(sr // Pg == dr // Pg, tm.fwd_pod,
+                              tm.fwd_inter))
+    brtt_f = (fwd_f + tm.ret_inter).astype(np.float32)
     ret_f = jnp.asarray(tm.ret_inter, I32)
 
     bdp = float(tm.brtt_inter * MTU)
@@ -285,28 +299,48 @@ def derive(cfg: SimConfig, wl: Workload):
         cnt[r] += 1
     window = int(min(wl.window, FMAX))
 
-    # ---- per-emitter routing constants ----
-    # wire latency after departure, per emitter kind.  fabric.departures /
-    # sender.sends rely on the latency being uniform within each of the
-    # three contiguous emitter classes (core ports, edge ports, sender
-    # NICs) and strictly below the ring length L.
+    # ---- per-emitter wire latency ----
+    # fabric.departures / sender.sends rely on the latency being uniform
+    # within each of the three contiguous emitter classes (switch-facing
+    # ports at any tier, edge ports, sender NICs) and strictly below the
+    # ring length L.
     lat_q = np.zeros(NE, np.int32)
-    lat_q[topo.kind == KIND_T0_UP] = link.link_lat_ticks + link.switch_lat_ticks
-    lat_q[topo.kind == KIND_T1_DOWN] = link.link_lat_ticks + link.switch_lat_ticks
-    lat_q[topo.kind == KIND_T0_DOWN] = link.link_lat_ticks
-    lat_q[topo.kind == KIND_SENDER] = 1 + link.link_lat_ticks + link.switch_lat_ticks
-    for cls in (lat_q[:2 * P * U], lat_q[2 * P * U:NQ], lat_q[NQ:]):
+    lat_q[:QE] = link.link_lat_ticks + link.switch_lat_ticks
+    lat_q[QE:NQ] = link.link_lat_ticks
+    lat_q[NQ:] = 1 + link.link_lat_ticks + link.switch_lat_ticks
+    for cls in (lat_q[:QE], lat_q[QE:NQ], lat_q[NQ:]):
         if not (np.all(cls == cls[0]) and 0 < cls[0] < L):
             raise ValueError(
                 f"wire latency must be uniform within each emitter class "
-                f"(core/edge/sender) and satisfy 0 < lat < L={L}; got "
-                f"{sorted(set(lat_q.tolist()))}")
+                f"(switch-facing/edge/sender) and satisfy 0 < lat < L={L}; "
+                f"got {sorted(set(lat_q.tolist()))}")
 
     # ---- fault maps ----
+    # A fault names one port: the historical 3-tuple (rack, uplink, period)
+    # hits a t0_up port; a 4-tuple ("t0_up"|"t1_up"|"t2_down"|"t1_down",
+    # i, j, period) addresses any tier (core-link faults included).
+    # period 0 = dead (blackholes traffic), period p > 1 = serviced every
+    # p-th tick (degraded link).
+    fault_port = {"t0_up": topo.t0_up, "t1_up": topo.t1_up,
+                  "t2_down": topo.t2_down, "t1_down": topo.t1_down}
     service_period = np.ones(NQ, np.int32)
     dead = np.zeros(NQ, bool)
-    for (r, k, period) in cfg.faults:
-        q = topo.t0_up(r, k)
+    for f in cfg.faults:
+        if len(f) == 3:
+            kind_name, i, j, period = "t0_up", *f
+        elif len(f) == 4:
+            kind_name, i, j, period = f
+        else:
+            raise ValueError(
+                f"fault {f!r}: want (rack, uplink, period) or "
+                f"(kind, i, j, period)")
+        if kind_name not in fault_port:
+            raise ValueError(
+                f"fault {f!r}: unknown port kind {kind_name!r}; one of "
+                f"{sorted(fault_port)}")
+        q = fault_port[kind_name](i, j)
+        if not 0 <= q < QE:
+            raise ValueError(f"fault {f!r}: port {q} outside the fabric")
         if period == 0:
             dead[q] = True
         else:
@@ -331,7 +365,8 @@ def derive(cfg: SimConfig, wl: Workload):
 
     dims = Dims(
         N=N, NQ=NQ, NE=NE, NF=NF, CAP=CAP, W=W, WW=WW, L=L, R=R,
-        MAXW=MAXW, FMAX=FMAX, FRMAX=FRMAX, P=P, U=U, M=M, PU=P * U,
+        MAXW=MAXW, FMAX=FMAX, FRMAX=FRMAX, P=P, U=U, M=M, QE=QE,
+        tiers=tree.tiers,
         window=window, mtu=int(MTU), brtt_inter=int(tm.brtt_inter),
         bdp_bytes=bdp, superstep=superstep, leap=leap,
         trimming=cfg.trimming,
@@ -348,8 +383,6 @@ def derive(cfg: SimConfig, wl: Workload):
         flows_of=jnp.asarray(flows_of),
         slot_of=jnp.asarray(slot_of),
         flows_by_recv=jnp.asarray(flows_by_recv),
-        kind=jnp.asarray(topo.kind, I32),
-        e_aux=jnp.asarray(topo.aux, I32),
         lat_q=jnp.asarray(lat_q),
         service_period=jnp.asarray(service_period),
         dead=jnp.asarray(dead),
@@ -366,10 +399,16 @@ def derive(cfg: SimConfig, wl: Workload):
         eidx=jnp.arange(NE, dtype=I32),
         flow_ids=jnp.arange(NF, dtype=I32),
         node_ids=jnp.arange(N, dtype=I32),
-        kind_q=jnp.asarray(topo.kind[:NQ], I32),
-        aux_q=jnp.asarray(topo.aux[:NQ], I32),
+        nbr_q=jnp.asarray(np.maximum(topo.nbr_sw[:NQ], 0), I32),
+        edge_q=jnp.asarray(topo.nbr_sw[:NQ] < 0),
+        sw_lo=jnp.asarray(topo.sw_lo, I32),
+        sw_hi=jnp.asarray(topo.sw_hi, I32),
+        sw_up_base=jnp.asarray(topo.sw_up_base, I32),
+        sw_up_cnt=jnp.asarray(topo.sw_up_cnt, I32),
+        sw_salt=jnp.asarray(topo.sw_salt, jnp.uint32),
+        down_tbl=jnp.asarray(topo.down_tbl, I32),
         lat_core=jnp.asarray(lat_q[0], I32),
-        lat_edge=jnp.asarray(lat_q[2 * P * U], I32),
+        lat_edge=jnp.asarray(lat_q[QE], I32),
         lat_send=jnp.asarray(lat_q[NQ], I32),
         iota_l=jnp.arange(L, dtype=I32),
         iota_r=jnp.arange(R, dtype=I32),

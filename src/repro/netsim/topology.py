@@ -1,19 +1,33 @@
-"""Two-tier fat-tree topology: static port enumeration + routing constants.
+"""Tier-generic fat-tree topology: static port enumeration + routing tables.
 
-Queue (output-port) layout, indexed contiguously:
+Queue (output-port) layout, indexed contiguously; empty blocks vanish, so a
+two-tier tree reproduces the historical layout exactly:
 
-  t0_up[r, k]   : rack r's uplink to spine k          ids [0, P*U)
-  t1_down[k, r] : spine k's downlink to rack r        ids [P*U, 2*P*U)
-  t0_down[node] : rack's downlink to a host NIC       ids [2*P*U, 2*P*U + N)
+  t0_up[r, a]    : rack r's uplink to T1 switch a        (P * U1 ports)
+  t1_up[s1, j]   : T1 switch s1's uplink to the core     (3-tier only)
+  t2_down[c, g]  : core c's downlink to pod g            (3-tier only)
+  t1_down[s1, i] : T1 switch s1's downlink to its i-th rack
+  t0_down[node]  : rack's downlink to a host NIC         (last N queues)
 
 Emitters (anything that can place one packet per tick onto a wire):
   ids [0, NQ)            : the queues above
   ids [NQ, NQ + N)       : host NICs (senders)
 
-Routing is purely functional: (emitter, dst_node, entropy) -> next queue id,
-with negative ids encoding delivery to node (-(node+1)).  ECMP uplink choice
-hashes the packet entropy with a per-rack salt, exactly like switch ECMP
-hashing a header field (paper Sec. 3.6).
+Every queue below the t0_down block faces a switch; the t0_down block faces
+hosts — so wire latency stays uniform within three contiguous emitter
+classes (switch-facing, host-facing, sender NICs), which the fabric's
+dynamic-update-slice wire writes rely on.
+
+Routing is table-driven and purely functional: each emitter names the
+switch its wire feeds (``nbr_sw``), and each switch carries its subtree
+interval ``[sw_lo, sw_hi)`` of host nodes, a dense down-port table
+``down_tbl[sw, dst]``, and its contiguous run of equal-cost up ports
+(``sw_up_base``/``sw_up_cnt``).  A packet at a switch goes *down* via one
+gather when dst is in the subtree, else *up* via an ECMP hash of the packet
+entropy with the per-switch salt ``sw_salt`` — exactly like switch ECMP
+hashing a header field (paper Sec. 3.6); on a three-tier tree the same hash
+selects among core paths at the T1 tier.  ``fabric.route_switch`` is the
+(single) jax consumer of these tables.
 """
 
 from __future__ import annotations
@@ -28,6 +42,15 @@ KIND_T0_UP = 0
 KIND_T1_DOWN = 1
 KIND_T0_DOWN = 2
 KIND_SENDER = 3
+KIND_T1_UP = 4
+KIND_T2_DOWN = 5
+
+HOST = -1  # nbr_sw sentinel: this port's wire ends at a host NIC
+
+# the historical per-rack ECMP salt formula, now applied per switch id
+# (rack switch ids equal rack indices, so two-tier hashes are unchanged)
+SALT_MUL = 0x9E37
+SALT_ADD = 0x1234
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,43 +58,165 @@ class Topology:
     tree: FatTreeConfig
     n_queues: int
     n_emitters: int
+    n_switches: int
     # per-emitter static arrays (numpy; moved to device by the engine)
     kind: np.ndarray        # [E] emitter kind
-    rack: np.ndarray        # [E] rack of the emitter (or spine for t1_down)
-    aux: np.ndarray         # [E] spine index (t0_up), rack (t1_down), node (t0_down/sender)
+    rack: np.ndarray        # [E] rack (T0) / T1 index / core index
+    aux: np.ndarray         # [E] uplink / local-rack / node auxiliary index
+    nbr_sw: np.ndarray      # [E] switch this emitter's wire feeds (HOST = -1)
+    # per-switch routing tables (switch ids: racks [0, P), T1 [P, P+n_t1),
+    # cores [P+n_t1, P+n_t1+n_cores))
+    sw_tier: np.ndarray     # [NSW] 0 = rack, 1 = T1, 2 = core
+    sw_lo: np.ndarray       # [NSW] subtree host interval [lo, hi)
+    sw_hi: np.ndarray
+    sw_up_base: np.ndarray  # [NSW] first up-port queue id
+    sw_up_cnt: np.ndarray   # [NSW] equal-cost up ports (0 at the top tier)
+    sw_salt: np.ndarray     # [NSW] uint32 per-switch ECMP hash salt
+    down_tbl: np.ndarray    # [NSW, N] down-port queue id toward each node
 
-    def t0_up(self, r: int, k: int) -> int:
-        return r * self.tree.uplinks + k
+    # ---- queue-id helpers (block bases precomputed in build_topology) ----
 
-    def t1_down(self, k: int, r: int) -> int:
-        return self.tree.racks * self.tree.uplinks + k * self.tree.racks + r
+    def t0_up(self, r: int, a: int) -> int:
+        return r * self.tree.uplinks + a
+
+    def t1_up(self, s1: int, j: int) -> int:
+        """T1 switch ``s1`` (pod-major: g * uplinks + a), core uplink j."""
+        t = self.tree
+        if not t.pods:
+            raise ValueError("t1_up ports exist only on three-tier trees")
+        return t.racks * t.uplinks + s1 * t.core_uplinks + j
+
+    def t2_down(self, c: int, g: int) -> int:
+        """Core switch ``c`` (= a * core_uplinks + j), downlink to pod g."""
+        t = self.tree
+        if not t.pods:
+            raise ValueError("t2_down ports exist only on three-tier trees")
+        return (t.racks * t.uplinks + t.n_t1 * t.core_uplinks
+                + c * t.pods + g)
+
+    def t1_down(self, s1: int, i: int) -> int:
+        """T1 switch ``s1``'s downlink to its i-th rack (two-tier: spine
+        s1's downlink to rack i — the historical (k, r) layout)."""
+        t = self.tree
+        base = (t.racks * t.uplinks + t.n_t1 * t.core_uplinks
+                + t.n_cores * t.pods)
+        return base + s1 * t.racks_per_pod + i
 
     def t0_down(self, node: int) -> int:
-        return 2 * self.tree.racks * self.tree.uplinks + node
+        return self.n_queues - self.tree.n_nodes + node
 
     def sender(self, node: int) -> int:
         return self.n_queues + node
 
+    # ---- switch-id helpers ----
+
+    def rack_sw(self, r: int) -> int:
+        return r
+
+    def t1_sw(self, s1: int) -> int:
+        return self.tree.racks + s1
+
+    def core_sw(self, c: int) -> int:
+        return self.tree.racks + self.tree.n_t1 + c
+
 
 def build_topology(tree: FatTreeConfig) -> Topology:
-    P, U, M, N = tree.racks, tree.uplinks, tree.nodes_per_rack, tree.n_nodes
-    nq = 2 * P * U + N
+    P, U1, M, N = tree.racks, tree.uplinks, tree.nodes_per_rack, tree.n_nodes
+    three = tree.tiers == 3
+    G = tree.pods if three else 1
+    Pg = tree.racks_per_pod                  # racks per T1 subtree
+    U2 = tree.core_uplinks
+    NA = tree.n_t1                           # T1 switch count
+    C = tree.n_cores
+
+    b_t1up = P * U1
+    b_t2dn = b_t1up + NA * U2
+    b_t1dn = b_t2dn + C * G
+    b_t0dn = b_t1dn + NA * Pg
+    nq = b_t0dn + N
     ne = nq + N
+
     kind = np.zeros(ne, np.int32)
     rack = np.zeros(ne, np.int32)
     aux = np.zeros(ne, np.int32)
+    nbr = np.full(ne, HOST, np.int32)
+
+    nsw = P + NA + C
+    sw_tier = np.zeros(nsw, np.int32)
+    sw_lo = np.zeros(nsw, np.int32)
+    sw_hi = np.zeros(nsw, np.int32)
+    sw_up_base = np.zeros(nsw, np.int32)
+    sw_up_cnt = np.zeros(nsw, np.int32)
+    node_rack = np.arange(N, dtype=np.int32) // M
+
+    # ---- switches ----
     for r in range(P):
-        for k in range(U):
-            q = r * U + k
-            kind[q], rack[q], aux[q] = KIND_T0_UP, r, k
-    for k in range(U):
-        for r in range(P):
-            q = P * U + k * P + r
-            kind[q], rack[q], aux[q] = KIND_T1_DOWN, r, k
+        sw_tier[r] = 0
+        sw_lo[r], sw_hi[r] = r * M, (r + 1) * M
+        sw_up_base[r], sw_up_cnt[r] = r * U1, U1
+    for s1 in range(NA):
+        sw = P + s1
+        sw_tier[sw] = 1
+        if three:
+            g = s1 // U1
+            sw_lo[sw], sw_hi[sw] = g * Pg * M, (g + 1) * Pg * M
+            sw_up_base[sw] = b_t1up + s1 * U2
+            sw_up_cnt[sw] = U2
+        else:
+            sw_lo[sw], sw_hi[sw] = 0, N     # spine: whole fabric below
+    for c in range(C):
+        sw = P + NA + c
+        sw_tier[sw] = 2
+        sw_lo[sw], sw_hi[sw] = 0, N
+    sw_salt = (np.arange(nsw, dtype=np.uint32) * np.uint32(SALT_MUL)
+               + np.uint32(SALT_ADD))
+
+    # ---- down-port tables (dense per switch; rows are exact inside the
+    #      switch's subtree, entries outside it are never routed to) ----
+    down_tbl = np.zeros((nsw, N), np.int32)
+    down_tbl[:P] = b_t0dn + np.arange(N, dtype=np.int32)[None, :]
+    for s1 in range(NA):
+        if three:
+            g = s1 // U1
+            i = np.clip(node_rack - g * Pg, 0, Pg - 1)
+        else:
+            i = node_rack
+        down_tbl[P + s1] = b_t1dn + s1 * Pg + i
+    for c in range(C):
+        down_tbl[P + NA + c] = b_t2dn + c * G + node_rack // Pg
+
+    # ---- ports ----
+    for r in range(P):
+        for a in range(U1):
+            q = r * U1 + a
+            kind[q], rack[q], aux[q] = KIND_T0_UP, r, a
+            nbr[q] = P + ((r // Pg) * U1 + a if three else a)
+    for s1 in range(NA):
+        for j in range(U2):
+            q = b_t1up + s1 * U2 + j
+            kind[q], rack[q], aux[q] = KIND_T1_UP, s1, j
+            nbr[q] = P + NA + (s1 % U1) * U2 + j
+    for c in range(C):
+        for g in range(G):
+            q = b_t2dn + c * G + g
+            kind[q], rack[q], aux[q] = KIND_T2_DOWN, c, g
+            nbr[q] = P + g * U1 + c // U2
+    for s1 in range(NA):
+        for i in range(Pg):
+            q = b_t1dn + s1 * Pg + i
+            r = (s1 // U1) * Pg + i if three else i
+            kind[q], rack[q], aux[q] = KIND_T1_DOWN, r, s1
+            nbr[q] = r
     for n in range(N):
-        q = 2 * P * U + n
+        q = b_t0dn + n
         kind[q], rack[q], aux[q] = KIND_T0_DOWN, n // M, n
     for n in range(N):
         e = nq + n
         kind[e], rack[e], aux[e] = KIND_SENDER, n // M, n
-    return Topology(tree=tree, n_queues=nq, n_emitters=ne, kind=kind, rack=rack, aux=aux)
+        nbr[e] = n // M
+
+    return Topology(tree=tree, n_queues=nq, n_emitters=ne, n_switches=nsw,
+                    kind=kind, rack=rack, aux=aux, nbr_sw=nbr,
+                    sw_tier=sw_tier, sw_lo=sw_lo, sw_hi=sw_hi,
+                    sw_up_base=sw_up_base, sw_up_cnt=sw_up_cnt,
+                    sw_salt=sw_salt, down_tbl=down_tbl)

@@ -250,15 +250,22 @@ def staggered_large(tree: FatTreeConfig, n_flows: int, size_bytes: int,
 
 
 def alltoall(tree: FatTreeConfig, size_bytes: int, window: int = 4,
-             nodes: int | None = None, seed: int = 0) -> Workload:
-    """Windowed alltoall among the first ``nodes`` hosts (Sec. 4.5)."""
+             nodes: int | None = None, seed: int = 0,
+             spread: bool = False) -> Workload:
+    """Windowed alltoall among ``nodes`` hosts (Sec. 4.5).  Participants
+    are the first ``nodes`` hosts, or — with ``spread`` — evenly strided
+    across the whole fabric, so on a large multi-tier tree the collective
+    actually crosses racks, pods, and the core instead of staying inside
+    the first racks."""
     n = nodes or tree.n_nodes
+    stride = tree.n_nodes // n if spread else 1
+    ids = np.arange(n, dtype=np.int32) * stride
     srcs, dsts, orders = [], [], []
     for s in range(n):
         # classic shifted schedule: round j targets (s + j) mod n
         for j in range(1, n):
-            srcs.append(s)
-            dsts.append((s + j) % n)
+            srcs.append(ids[s])
+            dsts.append(ids[(s + j) % n])
             orders.append(j - 1)
     f = len(srcs)
     return Workload(

@@ -78,6 +78,23 @@ def test_study_one_compile_and_lanes_match_standalone(leap):
             np.testing.assert_array_equal(r.fct, np.asarray(st_i.fct))
 
 
+def test_study_lanes_match_standalone_three_tier():
+    """Same per-lane bitwise contract on a three-tier scenario: the lane
+    loop's per-lane horizons/exits must stay exact with core-path routing
+    and the longer cross-core rings."""
+    sc = scenario("tiny_3t")
+    points = ({}, {"start_cwnd_mult": 0.5})
+    seeds = (0, 3)
+    res = api.study(sc, points=points, seeds=seeds).run()
+    for pi, pt in enumerate(points):
+        sim_i = engine.build(apply_point(sc.cfg, pt), sc.wl)
+        assert sim_i.dims.tiers == 3
+        for si, seed in enumerate(seeds):
+            st_i = sim_i.run(max_ticks=sc.max_ticks, seed=seed)
+            _assert_state_equal(st_i,
+                                _lane(res.states, pi * len(seeds) + si))
+
+
 def test_build_sweep_lanes_match_study():
     """Compatibility wrapper: ``build_sweep`` runs the same lane loop, so
     its [P] states are bit-identical to the seed-0 lanes of a Study over

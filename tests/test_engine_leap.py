@@ -18,6 +18,8 @@ from repro.netsim.units import FatTreeConfig, LinkConfig
 
 TREE = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=2)
 OVERSUB = FatTreeConfig(racks=2, nodes_per_rack=8, uplinks=2)   # 4:1
+TREE3 = FatTreeConfig(racks=4, nodes_per_rack=2, uplinks=2,
+                      pods=2, core_uplinks=1)                   # core 2:1
 LINK = LinkConfig()
 
 
@@ -71,6 +73,24 @@ def test_leap_bit_for_bit_sparse_heavy_tailed():
                                 size_cap=64 * 4096, gap_mean=1200.0, seed=2)
     st = _assert_leap_equal(TREE, wl, max_ticks=40000)
     assert int(st.now) > 5000          # the span really is sparse
+
+
+def test_leap_bit_for_bit_three_tier_sparse():
+    """Three-tier fabric: the longer (cross-core) wire/control rings and
+    the extra routed tiers must leave the horizon reductions exact."""
+    wl = workloads.heavy_tailed(TREE3, 10, size_base=2 * 4096,
+                                size_cap=64 * 4096, gap_mean=1200.0, seed=11)
+    st = _assert_leap_equal(TREE3, wl, max_ticks=40000)
+    assert int(st.now) > 5000          # the span really is sparse
+
+
+def test_leap_bit_for_bit_three_tier_core_fault():
+    """A dead core uplink forces blackhole -> RTO cycles across the T2
+    plane; the timeout horizon must land the leap on every expiry."""
+    wl = workloads.permutation(TREE3, size_bytes=64 * 4096, seed=3)
+    st = _assert_leap_equal(TREE3, wl, faults=(("t1_up", 0, 0, 0),),
+                            fault_start=0, max_ticks=40000)
+    assert int(st.m.n_black) > 0 and int(st.m.n_to) > 0
 
 
 def test_leap_lands_on_timeouts():

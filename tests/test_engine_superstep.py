@@ -14,6 +14,8 @@ from repro.netsim.units import FatTreeConfig, LinkConfig
 
 TREE = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=2)
 OVERSUB = FatTreeConfig(racks=2, nodes_per_rack=8, uplinks=2)   # 4:1
+TREE3 = FatTreeConfig(racks=4, nodes_per_rack=4, uplinks=2,
+                      pods=2, core_uplinks=1)                   # core 4:1
 LINK = LinkConfig()
 
 
@@ -55,6 +57,17 @@ def test_superstep_exact_under_congestion_and_trimming():
     _, st1 = _run(OVERSUB, wl, superstep=1)
     _, stk = _run(OVERSUB, wl, superstep=0)
     assert int(st1.m.n_trim) > 0          # the scenario actually trims
+    _assert_state_equal(st1, stk)
+
+
+def test_superstep_exact_on_three_tier_core_congestion():
+    """Cross-core permutation on an oversubscribed three-tier fabric:
+    trims at the T1 uplinks, five-queue paths, longer rings — K>1 must
+    still match K=1 over the full pytree."""
+    wl = workloads.permutation(TREE3, size_bytes=48 * 4096, seed=6)
+    _, st1 = _run(TREE3, wl, superstep=1)
+    _, stk = _run(TREE3, wl, superstep=0)
+    assert int(st1.m.n_trim) > 0          # the core actually congests
     _assert_state_equal(st1, stk)
 
 

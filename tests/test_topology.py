@@ -1,0 +1,327 @@
+"""Topology and routing invariants for the tier-generic fat tree.
+
+Three layers of guarantees:
+
+* structural — ``build_topology``'s port blocks partition the queue space,
+  every wire feeds a real switch (or a host), and the routing tables stay
+  in range, for randomized 2- and 3-tier configs;
+* behavioral — the *production* routing functions (``fabric.route_from_
+  sender`` / ``route_step``) deliver every (src, dst, entropy) to dst in
+  exactly the analytic hop count, never revisit a port, and the ECMP
+  entropy hash covers every equal-cost uplink at every tier;
+* degenerate — on two-tier trees the table-driven routing must equal the
+  historical closed-form routing bit for bit, for the whole scenario
+  catalogue's trees.
+
+The randomized suites always run on numpy-seeded draws; hypothesis (a
+declared test dependency — CI installs ``.[test]``) additionally drives
+the same property through minimized search where available.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.netsim import fabric, hashing, workloads
+from repro.netsim.scenarios import (TREE_2TO1, TREE_4TO1, TREE_8TO1,
+                                    TREE_16, TREE_FLAT, TREE_TINY)
+from repro.netsim.state import SimConfig, derive
+from repro.netsim.topology import (KIND_SENDER, KIND_T0_DOWN, KIND_T0_UP,
+                                   KIND_T1_DOWN, KIND_T1_UP, KIND_T2_DOWN,
+                                   build_topology)
+from repro.netsim.units import FatTreeConfig, LinkConfig, path_queues
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:              # local envs without the test extra
+    HAVE_HYPOTHESIS = False
+
+I32 = np.int32
+
+# a spread of 2- and 3-tier shapes (including single-uplink and
+# single-pod corners) for the seeded randomized sweeps
+RANDOM_TREES = [
+    FatTreeConfig(racks=2, nodes_per_rack=2, uplinks=1),
+    FatTreeConfig(racks=3, nodes_per_rack=3, uplinks=2),
+    FatTreeConfig(racks=4, nodes_per_rack=4, uplinks=3),
+    FatTreeConfig(racks=2, nodes_per_rack=2, uplinks=2, pods=1,
+                  core_uplinks=1),
+    FatTreeConfig(racks=4, nodes_per_rack=2, uplinks=2, pods=2,
+                  core_uplinks=2),
+    FatTreeConfig(racks=6, nodes_per_rack=2, uplinks=3, pods=3,
+                  core_uplinks=1),
+    FatTreeConfig(racks=8, nodes_per_rack=2, uplinks=2, pods=4,
+                  core_uplinks=3),
+    FatTreeConfig(racks=9, nodes_per_rack=2, uplinks=1, pods=3,
+                  core_uplinks=2),
+]
+
+
+def _all_pairs_workload(tree: FatTreeConfig, rng=None, max_flows=256):
+    """Every ordered (src, dst) pair, subsampled when the fabric is big."""
+    n = tree.n_nodes
+    src, dst = np.meshgrid(np.arange(n, dtype=I32),
+                           np.arange(n, dtype=I32), indexing="ij")
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if src.shape[0] > max_flows:
+        idx = (rng or np.random.default_rng(0)).choice(
+            src.shape[0], size=max_flows, replace=False)
+        src, dst = src[idx], dst[idx]
+    f = src.shape[0]
+    return workloads.Workload(
+        name="pairs", src=src, dst=dst,
+        size=np.full(f, 4096, I32), t_start=np.zeros(f, I32),
+        order=np.zeros(f, I32))
+
+
+def _derive(tree: FatTreeConfig, wl):
+    return derive(SimConfig(link=LinkConfig(), tree=tree), wl)
+
+
+def _walk_paths(dims, consts, ents):
+    """Route every flow for every entropy from the sender NIC to delivery.
+
+    Returns ``hops`` [H+1, NF, E]: the queue id at each step (delivery
+    encoded negative, sticky once reached).  H is a hop budget one above
+    the longest legal path, so a loop shows up as a non-delivered entry.
+    """
+    e = jnp.asarray(ents, jnp.int32)[None, :]
+    f = jnp.arange(dims.NF, dtype=jnp.int32)[:, None]
+    d = consts.dst[:, None]
+    q = fabric.route_from_sender(dims, consts, f, e)
+    hops = [np.asarray(q)]
+    for _ in range(7):           # longest legal path is 5 queues
+        nxt = fabric.route_step(dims, consts,
+                                jnp.clip(q, 0, dims.NQ - 1), d, e)
+        q = jnp.where(q >= 0, nxt, q)
+        hops.append(np.asarray(q))
+    return np.stack(hops)
+
+
+def _check_routing(tree: FatTreeConfig, n_ents=32, rng=None):
+    """The full behavioral property for one tree (shared by the seeded
+    sweep and the hypothesis search)."""
+    wl = _all_pairs_workload(tree, rng)
+    topo, tm, dims, consts = _derive(tree, wl)
+    ents = np.arange(n_ents, dtype=I32)
+    hops = _walk_paths(dims, consts, ents)
+
+    # 1. delivery: the final entry is -(dst + 1) for every (flow, entropy)
+    want = -(np.asarray(consts.dst)[:, None] + 1)
+    np.testing.assert_array_equal(
+        hops[-1], np.broadcast_to(want, hops[-1].shape))
+
+    # 2. exact hop count per path class (number of queues traversed)
+    h_intra, h_pod, h_inter = path_queues(tree)
+    M, Pg = tree.nodes_per_rack, tree.racks_per_pod
+    sr, dr = wl.src // M, wl.dst // M
+    expect = np.where(sr == dr, h_intra,
+                      np.where(sr // Pg == dr // Pg, h_pod, h_inter))
+    n_queues = np.sum(hops >= 0, axis=0)
+    np.testing.assert_array_equal(
+        n_queues, np.broadcast_to(expect[:, None], n_queues.shape))
+
+    # 3. loop-free and in range: queues along a path are distinct valid ids
+    valid = hops >= 0
+    assert np.all(hops[valid] < dims.NQ)
+    s = np.sort(np.where(valid, hops, -np.arange(hops.shape[0])[:, None, None] - 1),
+                axis=0)
+    assert np.all((s[1:] != s[:-1]) | (s[1:] < 0)), "a path revisited a port"
+
+    # 4. ECMP coverage: over the entropy sweep, every switch with
+    # equal-cost up ports sees every one of them chosen — per tier, the
+    # sprayed load can reach the whole equal-cost set (paper Sec. 3.6)
+    up_cnt = np.asarray(consts.sw_up_cnt)
+    salts = np.asarray(consts.sw_salt)
+    sweep = np.arange(max(dims.NF * 4, 256), dtype=np.uint32)
+    for sw in np.flatnonzero(up_cnt > 0):
+        h = np.asarray(hashing.hash2(jnp.asarray(sweep),
+                                     jnp.asarray(np.uint32(salts[sw]))))
+        chosen = set((h % up_cnt[sw]).tolist())
+        assert chosen == set(range(up_cnt[sw])), \
+            f"switch {sw}: entropy sweep missed uplinks {set(range(up_cnt[sw])) - chosen}"
+
+    # 5. up-hops land inside the chosen switch's up-port run
+    up_base = np.asarray(consts.sw_up_base)
+    nbr_q = np.asarray(consts.nbr_q)
+    for step in range(hops.shape[0] - 1):
+        q, nxt = hops[step], hops[step + 1]
+        live = (q >= 0) & (nxt >= 0)
+        if not live.any():
+            continue
+        sw = nbr_q[q[live]]
+        down = np.asarray(consts.down_tbl)[sw, np.broadcast_to(
+            np.asarray(consts.dst)[:, None], q.shape)[live]]
+        is_down = nxt[live] == down
+        in_up_run = (nxt[live] >= up_base[sw]) & \
+            (nxt[live] < up_base[sw] + np.maximum(up_cnt[sw], 1))
+        assert np.all(is_down | in_up_run)
+
+
+# --------------------------------------------------------------------------
+# structural invariants
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tree", RANDOM_TREES,
+                         ids=[f"t{t.tiers}_{t.n_nodes}n" for t in RANDOM_TREES])
+def test_topology_structure(tree):
+    topo = build_topology(tree)
+    t = topo.tree
+    N, NQ, NE = t.n_nodes, topo.n_queues, topo.n_emitters
+    three = t.tiers == 3
+    # block sizes partition the queue space
+    n_t1dn = t.n_t1 * t.racks_per_pod
+    assert NQ == (t.racks * t.uplinks + t.n_t1 * t.core_uplinks
+                  + t.n_cores * max(t.pods, 0) + n_t1dn + N)
+    assert NE == NQ + N
+    assert topo.n_switches == t.n_switches
+    # the last N queues (and only those) are host-facing
+    assert np.all(topo.nbr_sw[NQ - N:NQ] == -1)
+    assert np.all(topo.nbr_sw[:NQ - N] >= 0)
+    assert np.all(topo.nbr_sw[:NQ - N] < topo.n_switches)
+    assert np.all(topo.nbr_sw[NQ:] >= 0)          # senders feed their rack
+    # kinds occupy their blocks
+    assert np.all(topo.kind[NQ:] == KIND_SENDER)
+    assert np.all(topo.kind[NQ - N:NQ] == KIND_T0_DOWN)
+    if three:
+        assert np.sum(topo.kind == KIND_T1_UP) == t.n_t1 * t.core_uplinks
+        assert np.sum(topo.kind == KIND_T2_DOWN) == t.n_cores * t.pods
+    else:
+        assert not np.any(topo.kind == KIND_T1_UP)
+        assert not np.any(topo.kind == KIND_T2_DOWN)
+    # subtree intervals: racks tile the hosts; T1 covers its pod; cores all
+    P = t.racks
+    np.testing.assert_array_equal(topo.sw_lo[:P],
+                                  np.arange(P) * t.nodes_per_rack)
+    assert np.all(topo.sw_hi - topo.sw_lo > 0)
+    assert np.all(topo.sw_hi <= N)
+    # every up run lies in the queue space, down tables point at queues
+    assert np.all(topo.sw_up_base + topo.sw_up_cnt <= NQ)
+    assert np.all((topo.down_tbl >= 0) & (topo.down_tbl < NQ))
+    # helper ids agree with the arrays
+    assert topo.t0_down(0) == NQ - N
+    assert topo.sender(N - 1) == NE - 1
+    if three:
+        q = topo.t1_up(1, t.core_uplinks - 1)
+        assert topo.kind[q] == KIND_T1_UP
+        q = topo.t2_down(t.n_cores - 1, t.pods - 1)
+        assert topo.kind[q] == KIND_T2_DOWN
+
+
+def test_fat_tree_config_validation():
+    with pytest.raises(ValueError, match="core_uplinks"):
+        FatTreeConfig(racks=4, nodes_per_rack=2, uplinks=2, core_uplinks=2)
+    with pytest.raises(ValueError, match="core_uplinks >= 1"):
+        FatTreeConfig(racks=4, nodes_per_rack=2, uplinks=2, pods=2)
+    with pytest.raises(ValueError, match="divide evenly"):
+        FatTreeConfig(racks=5, nodes_per_rack=2, uplinks=2, pods=2,
+                      core_uplinks=1)
+
+
+# --------------------------------------------------------------------------
+# behavioral routing property (seeded sweep + hypothesis search)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tree", RANDOM_TREES,
+                         ids=[f"t{t.tiers}_{t.n_nodes}n" for t in RANDOM_TREES])
+def test_routing_reaches_dst_loop_free_with_coverage(tree):
+    _check_routing(tree, rng=np.random.default_rng(1))
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _trees(draw):
+        tiers = draw(st.sampled_from((2, 3)))
+        m = draw(st.integers(1, 4))
+        u1 = draw(st.integers(1, 4))
+        if tiers == 2:
+            p = draw(st.integers(2, 6))
+            return FatTreeConfig(racks=p, nodes_per_rack=m, uplinks=u1)
+        pods = draw(st.integers(1, 4))
+        pg = draw(st.integers(1, 3))
+        u2 = draw(st.integers(1, 3))
+        return FatTreeConfig(racks=pods * pg, nodes_per_rack=m, uplinks=u1,
+                             pods=pods, core_uplinks=u2)
+
+    @settings(max_examples=15, deadline=None)
+    @given(tree=_trees(), seed=st.integers(0, 2**31 - 1))
+    def test_routing_property_hypothesis(tree, seed):
+        if tree.n_nodes < 2:
+            return
+        _check_routing(tree, n_ents=16, rng=np.random.default_rng(seed))
+
+
+# --------------------------------------------------------------------------
+# two-tier degenerate case: table-driven == historical closed form
+# --------------------------------------------------------------------------
+
+
+def _closed_form_from_queue(dims, topo, consts, flow):
+    """The pre-table routing (verbatim semantics): t0_up -> t1_down[spine,
+    drack]; t1_down -> t0_down[dst]; t0_down -> deliver."""
+    d = np.asarray(consts.dst)[np.clip(flow, 0, dims.NF - 1)]
+    drack = d // dims.M
+    PU = dims.P * dims.U
+    k, ax = topo.kind[:dims.NQ], topo.aux[:dims.NQ]
+    r_up = PU + ax * dims.P + drack
+    r_t1 = 2 * PU + d
+    r_del = -(d + 1)
+    return np.where(k == KIND_T0_UP, r_up,
+                    np.where(k == KIND_T1_DOWN, r_t1, r_del))
+
+
+def _closed_form_from_sender(dims, consts, f, ent):
+    sr = np.asarray(consts.src)[f] // dims.M
+    d = np.asarray(consts.dst)[f]
+    h = np.asarray(hashing.hash2(
+        jnp.asarray(ent, jnp.uint32),
+        (jnp.asarray(sr, jnp.int32) * 0x9E37 + 0x1234).astype(jnp.uint32))
+        % jnp.uint32(dims.U)).astype(I32)
+    PU = dims.P * dims.U
+    return np.where(d // dims.M == sr, 2 * PU + d, sr * dims.U + h)
+
+
+@pytest.mark.parametrize(
+    "tree", [TREE_TINY, TREE_16, TREE_FLAT, TREE_2TO1, TREE_4TO1, TREE_8TO1],
+    ids=["tiny", "16", "flat", "2to1", "4to1", "8to1"])
+def test_two_tier_table_routing_equals_closed_form(tree):
+    """On every catalogue two-tier tree the new table-driven routing must
+    reproduce the historical closed form bit for bit: same first queue for
+    every (flow, entropy), same next queue for every (port, head packet)."""
+    rng = np.random.default_rng(3)
+    wl = _all_pairs_workload(tree, rng)
+    topo, tm, dims, consts = _derive(tree, wl)
+
+    ents = np.arange(64, dtype=I32)
+    f = np.arange(dims.NF, dtype=I32)[:, None]
+    got = np.asarray(fabric.route_from_sender(
+        dims, consts, jnp.asarray(f), jnp.asarray(ents)[None, :]))
+    want = _closed_form_from_sender(
+        dims, consts, np.broadcast_to(f, got.shape),
+        np.broadcast_to(ents[None, :], got.shape))
+    np.testing.assert_array_equal(got, want)
+
+    # Per-port head flows must be *reachable* there: a packet in a t1_down
+    # queue feeding rack r necessarily has its dst under rack r (both the
+    # closed form and the tables assume sound upstream routing; on garbage
+    # (port, dst) combos they legitimately disagree).
+    dsts = np.asarray(consts.dst)
+    by_rack = [np.flatnonzero(dsts // dims.M == r) for r in range(dims.P)]
+    assert all(len(b) for b in by_rack)
+    for _ in range(8):
+        flow = rng.integers(0, dims.NF, dims.NQ).astype(I32)
+        for q in range(dims.NQ):
+            if topo.kind[q] == KIND_T1_DOWN:
+                cand = by_rack[topo.rack[q]]
+                flow[q] = cand[rng.integers(0, len(cand))]
+        ent = rng.integers(0, 256, dims.NQ).astype(I32)
+        got_q = np.asarray(fabric.route_from_queue(
+            dims, consts, jnp.asarray(flow), jnp.asarray(ent)))
+        want_q = _closed_form_from_queue(dims, topo, consts, flow)
+        np.testing.assert_array_equal(got_q, want_q)
