@@ -24,6 +24,12 @@ down`` metrics like completion ticks) prints a GitHub ``::warning::``
 annotation (and a plain line for local runs).  Exit code stays 0 —
 machine-speed drift on shared CI runners makes a hard gate flakier than
 it is useful; the ledger itself is the reviewed artifact.
+
+``--require`` takes comma-separated row-name prefixes that must match at
+least one *compared* row (present in both documents) — CI passes the
+three-tier and pallas-backend families here, so a refactor that silently
+drops those rows from the quick bench warns instead of shrinking
+coverage unnoticed.
 """
 
 from __future__ import annotations
@@ -82,6 +88,10 @@ def main(argv=None) -> int:
     p.add_argument("--threshold", type=float, default=0.30,
                    help="warn when the fresh metric is more than this "
                         "fraction worse than the ledger (default 0.30)")
+    p.add_argument("--require", default=None, metavar="PREFIXES",
+                   help="comma-separated row-name prefixes that must each "
+                        "match a compared row (e.g. 'tiny_3t/pallas,"
+                        "tiny_3t/jnp') — warns on missing coverage")
     args = p.parse_args(argv)
 
     fresh = load_rows(args.fresh, args.section, args.metric)
@@ -94,6 +104,13 @@ def main(argv=None) -> int:
     for name in common:
         print(f"#   {name}: {fresh[name][args.metric]:g} vs "
               f"{ledger[name][args.metric]:g} {args.metric}")
+    for prefix in (args.require.split(",") if args.require else []):
+        prefix = prefix.strip()
+        if prefix and not any(n.startswith(prefix) for n in common):
+            msg = (f"required bench row family {prefix!r} matched no "
+                   f"compared row — coverage shrank")
+            print(f"::warning title=bench coverage::{msg}")
+            print(msg, file=sys.stderr)
 
     regressions = list(compare(fresh, ledger, args.threshold,
                                args.metric, args.direction))

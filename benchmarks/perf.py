@@ -57,9 +57,11 @@ def scenarios(quick: bool):
     """(registry scenario name, backends) per standard dense scenario —
     the names double as ledger row keys (``repro.netsim.scenarios``).
 
-    The pallas backend runs the cc_update kernel in interpret mode on CPU
-    (orders of magnitude slower per tick), so it only gets the smallest
-    scenario of each mode; compiled-TPU runs lift that restriction.
+    A ``pallas`` row runs *all* the registered kernels on that backend
+    (cc_update + the fused enqueue-rank/arbitration + the packed ring
+    drain) in interpret mode on CPU (orders of magnitude slower per
+    tick), so it only gets the smallest scenario of each mode;
+    compiled-TPU runs lift that restriction.
     """
     if quick:
         return [("tiny_incast3", ("jnp", "pallas")),
@@ -80,14 +82,21 @@ def leap_scenarios(quick: bool):
 
 
 def tier3_scenarios(quick: bool):
-    """Three-tier (core-plane) scenarios: the paper-scale fabrics.  Big
-    per-tick working sets (512 nodes, ~1.8k emitters), so they run the
-    production superstep only (plus the legacy k1 baseline) rather than
-    the whole superstep ladder."""
+    """(registry scenario name, backends) per three-tier (core-plane)
+    scenario: the paper-scale fabrics.  Big per-tick working sets
+    (512-1024 nodes, 1.8k-3.6k emitters), so they run the production
+    superstep only (plus the legacy k1 baseline) rather than the whole
+    superstep ladder.  The pallas kernel backends (interpret mode on
+    CPU) run only on the tiny 3-tier fabric, same policy as the dense
+    list."""
     if quick:
-        return ["tiny_3t"]
-    return ["perm_512n_3t", "incast_256x1_3t", "alltoall_3t",
-            "perm_512n_3t_degraded"]
+        return [("tiny_3t", ("jnp", "pallas"))]
+    return [("perm_512n_3t", ("jnp",)),
+            ("perm_1024n_3t", ("jnp",)),
+            ("incast_256x1_3t", ("jnp",)),
+            ("alltoall_3t", ("jnp",)),
+            ("perm_512n_3t_degraded", ("jnp",)),
+            ("tiny_3t", ("jnp", "pallas"))]
 
 
 def superstep_sizes(brtt: int, quick: bool):
@@ -121,8 +130,14 @@ def bench_scenario(name, backend, reps, quick, ksizes=None):
     records its ``leap`` flag so ledger comparisons are labeled.
     ``ksizes`` overrides the measured superstep ladder: a list of sizes,
     or ``"production"`` for just the auto size (one base RTT — the
-    three-tier rows measure only that)."""
-    sc = scenario(name, cc_backend=backend)
+    three-tier rows measure only that).
+
+    A ``pallas`` row runs every registered kernel on that backend —
+    cc_update *and* the fabric enqueue-rank/arbitration and transport
+    ring-drain kernels — so the label means "the pallas hot loop", not
+    one kernel in isolation."""
+    sc = scenario(name, cc_backend=backend, fabric_backend=backend,
+                  transport_backend=backend)
     max_ticks = sc.max_ticks
     base_sim = sc.build()
     # baseline: the pre-PR engine — legacy tick op structure under the
@@ -155,6 +170,30 @@ def bench_scenario(name, backend, reps, quick, ksizes=None):
             ticks=ticks[label], wall_s=round(walls[label], 6),
             ticks_per_sec=round(tps, 1),
             speedup_vs_k1_ungated=round(speedup, 3)))
+    # per-scenario best-k record: which fused superstep size wins, and —
+    # loudly — whether fusion *lost* to the ungated k=1 reference (the
+    # regression mode this ledger exists to catch; a fused k>1 loop
+    # re-running a too-expensive tick body can sit below the legacy
+    # baseline, as perm_512n_3t did before the large-N scatter work)
+    fused = {lbl: ticks[lbl] / walls[lbl] for lbl in sims
+             if int(lbl[1:]) > 1}
+    if fused:
+        best_lbl = max(fused, key=fused.get)
+        best_tps = fused[best_lbl]
+        regression = bool(best_tps < base_tps)
+        emit(f"perf_{name}_{backend}_best_k", walls[best_lbl],
+             f"best_k={best_lbl[1:]};ticks_per_sec={best_tps:.0f};"
+             f"fusion_regression={regression}")
+        if regression:
+            print(f"# !! FUSION REGRESSION {name}/{backend}: best fused "
+                  f"{best_lbl} = {best_tps:.0f} ticks/s < k1_ungated = "
+                  f"{base_tps:.0f} ticks/s", flush=True)
+        rows.append(dict(
+            name=f"{name}/{backend}/best_k", scenario=name, backend=backend,
+            kind="best_k", best_k=int(best_lbl[1:]),
+            ticks_per_sec=round(best_tps, 1),
+            speedup_vs_k1_ungated=round(best_tps / base_tps, 3),
+            fusion_regression=regression))
     return rows
 
 
@@ -210,6 +249,20 @@ def main(argv=None) -> None:
     t0 = time.time()
     print("name,us_per_call,derived")
     rows = []
+    # three-tier rows run FIRST: the large-N numbers are the ledger's
+    # headline and in-process memory pressure from the earlier dense /
+    # interpret-mode pallas suites suppresses later timings by ~10-12%
+    # (allocator fragmentation + compiled-workspace residue), which is
+    # measurement pollution, not engine speed.  The small dense/leap
+    # scenarios are far less sensitive to heap state.
+    for name, backends in tier3_scenarios(args.quick):
+        if not picked(name):
+            continue
+        if args.backends:
+            backends = [b for b in args.backends.split(",") if b]
+        for backend in backends:
+            rows.extend(bench_scenario(name, backend, min(reps, 2),
+                                       args.quick, ksizes="production"))
     for name, backends in scenarios(args.quick):
         if not picked(name):
             continue
@@ -220,10 +273,6 @@ def main(argv=None) -> None:
     for name in leap_scenarios(args.quick):
         if picked(name):
             rows.extend(bench_leap_scenario(name, min(reps, 2)))
-    for name in tier3_scenarios(args.quick):
-        if picked(name):
-            rows.extend(bench_scenario(name, "jnp", min(reps, 2),
-                                       args.quick, ksizes="production"))
     path = write_bench_json(
         "perf", rows, path=args.json_path,
         meta=dict(quick=bool(args.quick), reps=reps, jax=jax.__version__,

@@ -1,0 +1,48 @@
+"""Backend dispatch for the packed sent-ring drain kernel.
+
+``get(backend)`` resolves ``SimConfig.transport_backend`` to the drain
+callable ``transport.control`` folds its ACK/trim/timeout events through:
+
+  ``drain(t, rto, started, has_ack, ack_seq, lbits, bitmap,
+          sent0, sent1, sent2) -> (state', n_to, spur, unacked_pkts)``
+
+with the contract of ``ref.ring_drain_ref`` (unpadded inputs).  Both
+backends are bit-for-bit interchangeable (asserted engine-deep in
+tests/test_engine_pallas.py); ``pallas`` runs in interpret mode off-TPU,
+exactly like the ``cc_update`` registry entry.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ring_drain import kernel as K
+from repro.kernels.ring_drain import ref as R
+
+BACKENDS = ("jnp", "pallas")
+
+
+def ring_drain(t, rto, started, has_ack, ack_seq, lbits, bitmap,
+               sent0, sent1, sent2, *, backend: str = "jnp",
+               interpret: bool = True):
+    w = sent0.shape[1]
+    ww = lbits.shape[1]
+    maxw = bitmap.shape[1]
+    if backend == "pallas":
+        return K.ring_drain(t, rto, started, has_ack, ack_seq, lbits,
+                            bitmap, sent0, sent1, sent2,
+                            w=w, ww=ww, maxw=maxw, interpret=interpret)
+    return R.ring_drain_ref(t, rto, started, has_ack, ack_seq, lbits,
+                            bitmap, sent0, sent1, sent2,
+                            w=w, ww=ww, maxw=maxw)
+
+
+def get(backend: str):
+    """Resolve a transport backend name to the drain callable."""
+    if backend not in BACKENDS:
+        raise KeyError(
+            f"unknown transport backend {backend!r}; have {BACKENDS}")
+    return functools.partial(ring_drain, backend=backend,
+                             interpret=jax.default_backend() != "tpu")

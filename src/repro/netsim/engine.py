@@ -33,9 +33,13 @@ function ``(Dims, Consts, SimState) -> SimState``:
 
 ``build`` resolves the CC algorithm to a backend-qualified update function
 (``cc_backend="jnp"`` pure jnp, or ``"pallas"`` for the ``kernels/
-cc_update`` kernel) and composes the phases over a ``Consts`` bundle of
-traced numerics — so retuning any parameter, or sweeping a whole grid of
-them, reuses one compiled step.  Batched execution (seed batches, sweep
+cc_update`` kernel) — and, the same way, the fabric's fused
+enqueue-rank/arbitration pair (``fabric_backend`` ->
+``kernels/enqueue_arb``) and the transport's packed sent-ring drain
+(``transport_backend`` -> ``kernels/ring_drain``); every backend pair is
+bit-for-bit interchangeable (DESIGN.md Sec. 6.4).  The phases compose
+over a ``Consts`` bundle of traced numerics — so retuning any parameter,
+or sweeping a whole grid of them, reuses one compiled step.  Batched execution (seed batches, sweep
 grids, full seed x point studies) lives in the experiment API
 (``netsim/api.py``, DESIGN.md Sec. 7): its lane loop vmaps ``step_fn``
 over ``[P*S]`` lanes with per-lane exit gating and leap horizons;
@@ -52,6 +56,8 @@ import jax.numpy as jnp
 
 from repro.core import registry, reps
 from repro.core.types import CCParams
+from repro.kernels.enqueue_arb import ops as enqueue_arb_ops
+from repro.kernels.ring_drain import ops as ring_drain_ops
 from repro.netsim import fabric, metrics, sender, transport
 from repro.netsim.metrics import HIST_BINS, jain_fairness, summarize  # noqa: F401 (re-export)
 from repro.netsim.state import (Consts, Dims, SimConfig, SimState,  # noqa: F401
@@ -136,14 +142,20 @@ class Sim:
 def build(cfg: SimConfig, wl: Workload) -> Sim:
     topo, tm, dims, consts = derive(cfg, wl)
     cc_update = registry.get(cfg.algo, cfg.cc_backend)
+    # fabric/transport hot-loop backends, resolved once like cc_update:
+    # enqueue-rank + round-robin arbitration (kernels/enqueue_arb) and the
+    # packed sent-ring drain (kernels/ring_drain) — "jnp" is the reference
+    # vector program, "pallas" the bit-identical blocked kernel
+    enqueue, arb = enqueue_arb_ops.get(cfg.fabric_backend)
+    drain = ring_drain_ops.get(cfg.transport_backend)
 
     def step_fn(consts: Consts, st: SimState) -> SimState:
         STEP_TRACE_COUNT[0] += 1
         st = fabric.departures(dims, consts, st)
-        st = fabric.arrivals(dims, consts, st)
-        st = transport.control(dims, consts, cc_update, st)
-        st = sender.grants(dims, consts, st)
-        st = sender.sends(dims, consts, st)
+        st = fabric.arrivals(dims, consts, st, enqueue=enqueue)
+        st = transport.control(dims, consts, cc_update, st, drain=drain)
+        st = sender.grants(dims, consts, st, arb=arb)
+        st = sender.sends(dims, consts, st, arb=arb)
         st = metrics.account(dims, consts, st)
         return st._replace(now=st.now + 1)
 

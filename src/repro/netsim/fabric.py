@@ -19,7 +19,6 @@ reduction over the live slots.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.netsim import hashing
@@ -33,17 +32,21 @@ def route_switch(dims: Dims, consts: Consts, sw, d, ent):
     """Table-driven next hop at switch ``sw`` for a packet to node ``d``
     carrying path entropy ``ent`` (all broadcastable arrays).
 
-    *Down* when ``d`` lies in the switch's subtree interval: one gather
-    from the per-switch down-port table.  *Up* otherwise: an ECMP hash of
-    the entropy with the per-switch salt selects among the switch's
-    contiguous run of equal-cost up ports — at the T0 tier that picks the
-    spine/agg, at the T1 tier of a three-tier tree the same hash (a
-    different salt) picks the core path (paper Sec. 3.6)."""
+    *Down* when ``d`` lies in the switch's subtree interval: the
+    run-length lookup ``dn_base[sw] + d // dn_stride[sw]`` (every tier's
+    down ports cover the subtree in equal-length node runs — see
+    ``topology.build_topology`` — so two [NSW] vectors replace the dense
+    ``[NSW, N]`` table this used to gather through).  *Up* otherwise: an
+    ECMP hash of the entropy with the per-switch salt selects among the
+    switch's contiguous run of equal-cost up ports — at the T0 tier that
+    picks the spine/agg, at the T1 tier of a three-tier tree the same
+    hash (a different salt) picks the core path (paper Sec. 3.6)."""
     down = (d >= consts.sw_lo[sw]) & (d < consts.sw_hi[sw])
     cnt = consts.sw_up_cnt[sw]
     h = (hashing.hash2(ent.astype(jnp.uint32), consts.sw_salt[sw])
          % jnp.maximum(cnt, 1).astype(jnp.uint32)).astype(I32)
-    return jnp.where(down, consts.down_tbl[sw, d], consts.sw_up_base[sw] + h)
+    return jnp.where(down, consts.dn_base[sw] + d // consts.dn_stride[sw],
+                     consts.sw_up_base[sw] + h)
 
 
 def route_from_queue(dims: Dims, consts: Consts, flow, ent):
@@ -115,9 +118,15 @@ def departures(dims: Dims, consts: Consts, st: SimState) -> SimState:
     return st._replace(q_head=q_head, q_size=q_size, infl=infl, m=m)
 
 
-def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
+def arrivals(dims: Dims, consts: Consts, st: SimState,
+             enqueue=None) -> SimState:
     """Phase 2: land this tick's wire slot — deliver at the edge (dedupe,
-    ACK generation) or enqueue mid-fabric (trim/drop on overflow)."""
+    ACK generation) or enqueue mid-fabric (trim/drop on overflow).
+
+    ``enqueue`` is the backend-resolved enqueue-rank callable
+    (``kernels/enqueue_arb/ops.get``); ``None`` means the pure-jnp
+    reference (the engine passes the ``SimConfig.fabric_backend``
+    resolution)."""
     t = st.now
     m = st.m
     NF, NQ, NE, N = dims.NF, dims.NQ, dims.NE, dims.N
@@ -128,9 +137,6 @@ def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
     # packets, which is what makes `horizon`'s occupied-slot reduction (and
     # therefore time leaping over the skipped blanket rewrites) sound
     infl = st.infl.at[t % L].set(0)
-    a_valid = arr[:, 0] == 1
-    a_dstq, a_flow, a_seq, a_ent, a_ecn, a_ts = (arr[:, i] for i in range(1, 7))
-    enq = a_valid & (a_dstq >= 0)
 
     # ---- deliveries ----
     # Only the t0_down ports (emitter rows [QE, QE+N), one per node, in
@@ -140,15 +146,27 @@ def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
     darr = arr[lo:lo + N]
     deliver = (darr[:, 0] == 1) & (darr[:, 1] < 0)
     d_flow, d_seq, d_ent, d_ecn, d_ts = (darr[:, i] for i in range(2, 7))
-    dflow = jnp.where(deliver, d_flow, NF)
-    word, bit = d_seq // 32, d_seq % 32
-    old = st.bitmap[dflow, word]
-    isnew = deliver & (((old >> bit) & 1) == 0)
-    bitmap = st.bitmap.at[dflow, word].add(
-        jnp.where(isnew, (1 << bit).astype(I32), 0), mode="promise_in_bounds")
-    psz = pkt_size(dims, consts, d_flow, d_seq)
-    goodput = st.goodput.at[jnp.where(isnew, d_flow, 0)].add(
-        jnp.where(isnew, psz, 0), mode="promise_in_bounds")
+    # Receiver ledgers in the *flow-major* view: flow f's packets can only
+    # ever land at node dst[f], and each node delivers at most one packet
+    # per tick — so one gather by ``dst`` plus a flow-id check replaces the
+    # historical per-node scatters into bitmap/goodput with dense [NF, *]
+    # elementwise updates (row f of the bitmap is flow f's own; the MAXW
+    # word axis is resolved with a one-hot select, never a gather).
+    dview = darr[consts.dst]                           # [NF, 7]
+    del_f = (dview[:, 0] == 1) & (dview[:, 1] < 0) & \
+        (dview[:, 2] == consts.flow_ids)
+    seq_f = jnp.where(del_f, dview[:, 3], 0)
+    word_f, bit_f = seq_f // 32, seq_f % 32
+    wsel = word_f[:, None] == jnp.arange(dims.MAXW, dtype=I32)  # [NF, MAXW]
+    bm = st.bitmap[:NF]
+    old_w = jnp.sum(jnp.where(wsel, bm, 0), axis=1)
+    isnew_f = del_f & (((old_w >> bit_f) & 1) == 0)
+    bitmap = st.bitmap.at[:NF].set(
+        bm + jnp.where(wsel & isnew_f[:, None],
+                       (1 << bit_f).astype(I32)[:, None], 0))
+    psz_f = jnp.where(isnew_f, pkt_size(dims, consts, consts.flow_ids,
+                                        seq_f), 0)
+    goodput = st.goodput + psz_f
     newly_done = (goodput >= consts.size) & ~st.done
     done = st.done | newly_done
     fct = jnp.where(newly_done, t + consts.ret - consts.t_start, st.fct)
@@ -161,26 +179,38 @@ def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
     ack_ring = st.ack_ring.at[(t + consts.ret) % R].set(ack_payload)
     m = m._replace(
         delivered_pkts=m.delivered_pkts + jnp.sum(deliver.astype(I32)),
-        delivered_bytes=m.delivered_bytes + jnp.sum(jnp.where(isnew, psz, 0)).astype(F32),
+        delivered_bytes=m.delivered_bytes + jnp.sum(psz_f).astype(F32),
     )
 
     # ---- enqueues (sort-free scatter with capacity + trim) ----
+    # Only the enqueue-capable emitters (wire feeds a switch: every core
+    # port + every sender NIC; the t0_down ports above deliver and never
+    # enqueue) take part, so the whole path runs on the compact [EQ] axis
+    # gathered through ``consts.enq_ids`` — every scatter below shrinks
+    # from NE to EQ rows, the dominant cost at fabric scale.
+    #
     # Same-queue arrivals must land in fixed emitter order (the semantics
     # the old stable-argsort ranking gave).  The rank of emitter e within
     # its destination-queue group is the count of emitters e' < e with the
-    # same destination — one [NE, NE] comparison + row-reduction, no sort,
-    # no searchsorted, and bit-for-bit the stable-argsort ranks.  (The
-    # quadratic form beats both the argsort and a one-hot [NE, NQ] prefix
-    # sum on CPU at fabric scale: it fuses to one elementwise+reduce pass,
-    # while cumsum lowers to a far slower reduce-window.)
+    # same destination; since same-queue emitters always feed the same
+    # switch, the compare+reduce runs per switch fan-in group over the
+    # static ``in_tbl``/``in_pos`` tables — O(NSW * DMAX^2) instead of the
+    # historical global [NE, NE] pass, bit-for-bit the same ranks (the
+    # compact enumeration is id-ascending, so group slot order is
+    # unchanged; kernels/enqueue_arb — the jnp reference and the Pallas
+    # kernel are interchangeable backends).
+    if enqueue is None:
+        from repro.kernels.enqueue_arb import ops as _arb_ops
+        enqueue = _arb_ops.enqueue_rank
+    earr = arr[consts.enq_ids]                         # [EQ, 7]
+    e_dstq, e_flow, e_seq, e_ent, e_ecn, e_ts = (
+        earr[:, i] for i in range(1, 7))
+    enq = (earr[:, 0] == 1) & (e_dstq >= 0)
     q_head, q_size = st.q_head, st.q_size
-    edst = jnp.where(enq, a_dstq, NQ)
-    before = (edst[None, :] == edst[:, None]) & \
-        (consts.eidx[None, :] < consts.eidx[:, None])
-    rank = jnp.sum(before.astype(I32), axis=1)
-    space = CAP - q_size[edst]
-    acc = (edst < NQ) & (rank < space)
-    pos = (q_head[edst] + q_size[edst] + rank) % CAP
+    edst = jnp.where(enq, e_dstq, NQ)
+    acc, pos, q_counts = enqueue(consts.in_tbl, consts.in_pos,
+                                 consts.sw_of_q, edst, q_head, q_size,
+                                 CAP, NQ)
     row = jnp.where(acc, edst, NQ)
     posw = jnp.where(acc, pos, 0)
     # (indices are NOT unique: every non-accepted emitter collapses onto
@@ -190,14 +220,15 @@ def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
     # leaping relies on)
     q_fields = st.q_fields.at[row, posw].set(
         jnp.where(acc[:, None],
-                  jnp.stack([a_flow, a_seq, a_ent, a_ecn, a_ts], axis=1), 0),
+                  jnp.stack([e_flow, e_seq, e_ent, e_ecn, e_ts], axis=1), 0),
         mode="promise_in_bounds")
-    q_size = q_size + jax.ops.segment_sum(acc.astype(I32), edst,
-                                          num_segments=NQ + 1)
+    # per-queue accepted counts come out of the fan-in groups (a dense
+    # compare+reduce in the ops layer), not a segment_sum scatter
+    q_size = q_size.at[:NQ].add(q_counts)
     rej = (edst < NQ) & ~acc
     # trim (paper: only when the buffer is full) or drop
-    rflow = jnp.where(rej, a_flow, NF)
-    rej_pkt = pkt_size(dims, consts, a_flow, a_seq)
+    rflow = jnp.where(rej, e_flow, NF)
+    rej_pkt = pkt_size(dims, consts, e_flow, e_seq)
     rej_bytes_i = jnp.where(rej, rej_pkt, 0)
     trim_seen = st.trim_seen
     if dims.credit_based:
@@ -208,18 +239,25 @@ def arrivals(dims: Dims, consts: Consts, st: SimState) -> SimState:
             rej_bytes_i.astype(F32), mode="promise_in_bounds")
     if dims.trimming:
         W, WW = dims.W, dims.WW
-        tslot = jnp.where(rej, (t + consts.trim_delay) % R, 0)
-        # one packed scatter feeds the whole delayed trim ledger: count,
-        # bytes (exact in i32), and the WW per-slot loss-bitmap words
-        wslot = (a_seq % W) // 32
-        wbit = (a_seq % W) % 32
+        # one packed update feeds the whole delayed trim ledger: count,
+        # bytes (exact in i32), and the WW per-slot loss-bitmap words.
+        # The trim notification delay is a scalar constant, so every
+        # rejection of this tick lands in ONE ring slot: scatter the
+        # per-emitter updates into a flow-major [NF+1, 2+WW] staging row
+        # (1-D indices — far cheaper than the historical 2-D-indexed
+        # scatter into the ring) and fold it in with a single slice add
+        # (adding the all-zero rows of idle flows is bitwise a no-op, the
+        # property time leaping relies on).
+        wslot = (e_seq % W) // 32
+        wbit = (e_seq % W) % 32
         words = jnp.where(
             rej[:, None] & (wslot[:, None] == jnp.arange(WW, dtype=I32)),
             (1 << wbit)[:, None].astype(I32), 0)
         upd = jnp.concatenate(
             [rej.astype(I32)[:, None], rej_bytes_i[:, None], words], axis=1)
-        trim_ring = st.trim_ring.at[tslot, rflow].add(
+        staged = jnp.zeros((NF + 1, 2 + WW), I32).at[rflow].add(
             upd, mode="promise_in_bounds")
+        trim_ring = st.trim_ring.at[(t + consts.trim_delay) % R].add(staged)
         m = m._replace(n_trim=m.n_trim + jnp.sum(rej.astype(I32)))
     else:
         trim_ring = st.trim_ring

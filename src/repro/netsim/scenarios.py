@@ -45,6 +45,10 @@ TREE_TINY = FatTreeConfig(racks=2, nodes_per_rack=2, uplinks=2)    # 4 nodes
 # evaluation shape (Sec. 4: up to 1024 endpoints on a 3-tier oversubscribed
 # fat tree), scaled to CPU-tractable sizes.  Oversubscription is per tier:
 # T0 = nodes_per_rack/uplinks, T1 = racks_per_pod/core_uplinks.
+TREE_1024_3T = FatTreeConfig(racks=128, nodes_per_rack=8, uplinks=4,
+                             pods=8, core_uplinks=4)  # 1024 nodes — the
+                                                      # paper's headline
+                                                      # scale (Sec. 4)
 TREE_512_3T = FatTreeConfig(racks=64, nodes_per_rack=8, uplinks=4,
                             pods=8, core_uplinks=4)   # 512 nodes, 2:1 x 2:1
 TREE_128_3T = FatTreeConfig(racks=16, nodes_per_rack=8, uplinks=2,
@@ -188,6 +192,10 @@ register("tiny_3t", lambda: _std(
 register("perm_512n_3t", lambda: _std(
     "perm_512n_3t", TREE_512_3T,
     workloads.permutation(TREE_512_3T, size_bytes=256 * KiB, seed=7),
+    60_000))
+register("perm_1024n_3t", lambda: _std(
+    "perm_1024n_3t", TREE_1024_3T,
+    workloads.permutation(TREE_1024_3T, size_bytes=256 * KiB, seed=7),
     60_000))
 register("incast_256x1_3t", lambda: _std(
     "incast_256x1_3t", TREE_512_3T,

@@ -49,6 +49,12 @@ class SimConfig:
     tree: FatTreeConfig = FatTreeConfig()
     algo: str = "smartt"
     cc_backend: str = "jnp"          # "jnp" | "pallas" (kernels/cc_update)
+    fabric_backend: str = "jnp"      # "jnp" | "pallas" — enqueue-rank +
+                                     # send/grant arbitration
+                                     # (kernels/enqueue_arb)
+    transport_backend: str = "jnp"   # "jnp" | "pallas" — sent-ring
+                                     # ACK/trim/timeout drain
+                                     # (kernels/ring_drain)
     lb: str = "reps"
     superstep: int = 0               # ticks fused per run-loop iteration;
                                      # 0 = auto (one base RTT), 1 = legacy
@@ -152,7 +158,7 @@ class Consts(NamedTuple):
     flow_ids: jnp.ndarray        # i32 [NF] flow iota
     node_ids: jnp.ndarray        # i32 [N] node iota
     # -- table-driven routing (topology.build_topology; fabric.route_switch
-    #    gathers through these — tier-generic, no closed forms) --
+    #    gathers through these — tier-generic, no dense tables) --
     nbr_q: jnp.ndarray           # i32 [NQ] switch each port's wire feeds
                                  #   (edge rows clamped to 0; edge_q gates)
     edge_q: jnp.ndarray          # bool [NQ] port delivers to a host NIC
@@ -161,7 +167,16 @@ class Consts(NamedTuple):
     sw_up_base: jnp.ndarray      # i32 [NSW] first equal-cost up port
     sw_up_cnt: jnp.ndarray       # i32 [NSW] up-port count (0 at top tier)
     sw_salt: jnp.ndarray         # u32 [NSW] per-switch ECMP hash salt
-    down_tbl: jnp.ndarray        # i32 [NSW, N] down port toward each node
+    dn_base: jnp.ndarray         # i32 [NSW] down port = dn_base + d // dn_stride
+    dn_stride: jnp.ndarray       # i32 [NSW] nodes covered per down port
+    sw_of_q: jnp.ndarray         # i32 [NQ] switch owning each queue
+    # -- compact enqueue emitters + per-switch fan-in groups (enqueue
+    #    ranking and per-queue accept counts, kernels/enqueue_arb) --
+    enq_ids: jnp.ndarray         # i32 [EQ] enqueue-capable emitter ids
+    in_tbl: jnp.ndarray          # i32 [NSW, DMAX] compact emitter indices
+                                 #   feeding each switch, ascending, pad EQ
+    in_pos: jnp.ndarray          # i32 [EQ] compact emitter's flat slot in
+                                 #   in_tbl
     lat_core: jnp.ndarray        # i32 scalar switch-facing-port wire latency
     lat_edge: jnp.ndarray        # i32 scalar t0_down wire latency
     lat_send: jnp.ndarray        # i32 scalar sender-NIC wire latency
@@ -235,13 +250,18 @@ def derive(cfg: SimConfig, wl: Workload):
     wl.validate(n_nodes=N)   # reject bad tables before any shape math
     MTU = float(link.mtu_bytes)
     CAP = int(tm.brtt_inter)                      # 1 BDP per port queue
+    max_pkts = int(np.ceil(wl.size.max() / MTU))
     # sent-ring slots: 1.5x the max window in packets (seq-range headroom;
-    # new sends block on occupied slots, modeling a bounded retx buffer)
+    # new sends block on occupied slots, modeling a bounded retx buffer) —
+    # but never wider than the workload's own seq space: once W >= max_pkts
+    # the slot map seq % W is injective for every flow, so any larger ring
+    # is trajectory-identical dead weight, and all the [NF, W] transport
+    # passes (ring drain, timeout scans, emission writes) pay for it.
     W = int(2 ** np.ceil(np.log2(max(1.5 * 1.25 * tm.brtt_inter, 32))))
+    W = min(W, int(2 ** np.ceil(np.log2(max(max_pkts, 32)))))
     WW = W // 32
     L = tm.hop + 2
     R = int(max(tm.ret_inter, tm.trim_delay) + tm.hop + 4)
-    max_pkts = int(np.ceil(wl.size.max() / MTU))
     MAXW = (max_pkts + 31) // 32
     P, U, M = tree.racks, tree.uplinks, tree.nodes_per_rack
     QE = NQ - N                                   # edge-port block base
@@ -406,7 +426,12 @@ def derive(cfg: SimConfig, wl: Workload):
         sw_up_base=jnp.asarray(topo.sw_up_base, I32),
         sw_up_cnt=jnp.asarray(topo.sw_up_cnt, I32),
         sw_salt=jnp.asarray(topo.sw_salt, jnp.uint32),
-        down_tbl=jnp.asarray(topo.down_tbl, I32),
+        dn_base=jnp.asarray(topo.dn_base, I32),
+        dn_stride=jnp.asarray(topo.dn_stride, I32),
+        sw_of_q=jnp.asarray(topo.sw_of_q, I32),
+        enq_ids=jnp.asarray(topo.enq_ids, I32),
+        in_tbl=jnp.asarray(topo.in_tbl, I32),
+        in_pos=jnp.asarray(topo.in_pos, I32),
         lat_core=jnp.asarray(lat_q[0], I32),
         lat_edge=jnp.asarray(lat_q[QE], I32),
         lat_send=jnp.asarray(lat_q[NQ], I32),

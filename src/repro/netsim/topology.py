@@ -20,14 +20,37 @@ dynamic-update-slice wire writes rely on.
 
 Routing is table-driven and purely functional: each emitter names the
 switch its wire feeds (``nbr_sw``), and each switch carries its subtree
-interval ``[sw_lo, sw_hi)`` of host nodes, a dense down-port table
-``down_tbl[sw, dst]``, and its contiguous run of equal-cost up ports
-(``sw_up_base``/``sw_up_cnt``).  A packet at a switch goes *down* via one
-gather when dst is in the subtree, else *up* via an ECMP hash of the packet
-entropy with the per-switch salt ``sw_salt`` — exactly like switch ECMP
-hashing a header field (paper Sec. 3.6); on a three-tier tree the same hash
-selects among core paths at the T1 tier.  ``fabric.route_switch`` is the
-(single) jax consumer of these tables.
+interval ``[sw_lo, sw_hi)`` of host nodes, its closed-form down-port rule,
+and its contiguous run of equal-cost up ports (``sw_up_base``/
+``sw_up_cnt``).  A packet at a switch goes *down* when dst is in the
+subtree, else *up* via an ECMP hash of the packet entropy with the
+per-switch salt ``sw_salt`` — exactly like switch ECMP hashing a header
+field (paper Sec. 3.6); on a three-tier tree the same hash selects among
+core paths at the T1 tier.  ``fabric.route_switch`` is the (single) jax
+consumer of these tables.
+
+Down-routing is interval/run-length coded rather than a dense
+``[NSW, N]`` table: at every tier the down ports of a switch cover its
+subtree in runs of equal length (1 node per rack port, ``M`` nodes per T1
+port, ``M * racks_per_pod`` nodes per core port), so the down port toward
+node ``d`` is ``dn_base[sw] + d // dn_stride[sw]`` — two [NSW] vectors
+replace the O(NSW * N) table the fabric used to gather through (the dense
+``down_tbl`` is still materialized here, as numpy, for tests and tools).
+
+Exactly the emitters with ``nbr_sw >= 0`` can ever enqueue (t0_down ports
+deliver to hosts instead); ``enq_ids`` enumerates them in ascending id
+order, and the whole enqueue path — ranking, queue writes, trim ledger —
+runs on that compacted [EQ] axis rather than all ``n_emitters`` rows.
+``in_tbl``/``in_pos`` give the inverse of ``nbr_sw`` over the compact
+enumeration: ``in_tbl[sw]`` lists the compact indices of the emitters
+feeding switch ``sw`` in ascending id order (padded with ``len(enq_ids)``),
+and ``in_pos[j]`` is compact emitter ``j``'s flat slot in that table.
+Emitters enqueueing to the same destination queue always feed the same
+switch (a queue belongs to exactly one switch — ``sw_of_q``), so the
+fabric's same-destination enqueue ranking only needs pairwise compares
+*within* a switch's fan-in group — O(NSW * fan_max^2) instead of O(NE^2) —
+and the per-queue accepted counts reduce over the owner's group instead of
+a segment-sum scatter.
 """
 
 from __future__ import annotations
@@ -73,6 +96,18 @@ class Topology:
     sw_up_cnt: np.ndarray   # [NSW] equal-cost up ports (0 at the top tier)
     sw_salt: np.ndarray     # [NSW] uint32 per-switch ECMP hash salt
     down_tbl: np.ndarray    # [NSW, N] down-port queue id toward each node
+    #   (dense reference form; the fabric routes via dn_base/dn_stride)
+    dn_base: np.ndarray     # [NSW] down port = dn_base + dst // dn_stride
+    dn_stride: np.ndarray   # [NSW] nodes covered per down port
+    sw_of_q: np.ndarray     # [NQ] switch owning each queue (output port)
+    # compact enqueue-capable emitter enumeration + per-switch fan-in
+    # (inverse of nbr_sw over that enumeration; enqueue-rank groups)
+    enq_ids: np.ndarray     # [EQ] emitter ids with nbr_sw >= 0, ascending
+    fan_max: int            # max emitters feeding one switch
+    in_tbl: np.ndarray      # [NSW, fan_max] compact indices of feeding
+    #   emitters, ascending, padded with EQ
+    in_pos: np.ndarray      # [EQ] compact emitter's flat slot
+    #   sw * fan_max + k in in_tbl
 
     # ---- queue-id helpers (block bases precomputed in build_topology) ----
 
@@ -171,8 +206,23 @@ def build_topology(tree: FatTreeConfig) -> Topology:
     sw_salt = (np.arange(nsw, dtype=np.uint32) * np.uint32(SALT_MUL)
                + np.uint32(SALT_ADD))
 
-    # ---- down-port tables (dense per switch; rows are exact inside the
-    #      switch's subtree, entries outside it are never routed to) ----
+    # ---- down-port rules ----
+    # At every tier a switch's down ports cover its subtree in equal-length
+    # runs of nodes, so the port toward node d is the run-length lookup
+    # dn_base + d // dn_stride (exact for every d inside the subtree, which
+    # is the only place routing ever goes down).  The dense table is kept,
+    # numpy-only, as the reference form for tests/tools; rows are exact
+    # inside the switch's subtree, entries outside it are never routed to.
+    dn_base = np.zeros(nsw, np.int32)
+    dn_stride = np.ones(nsw, np.int32)
+    dn_base[:P] = b_t0dn                         # rack: one port per node
+    for s1 in range(NA):
+        g = s1 // U1 if three else 0             # subtree starts at rack g*Pg
+        dn_base[P + s1] = b_t1dn + s1 * Pg - g * Pg
+        dn_stride[P + s1] = M                    # one port per rack
+    for c in range(C):
+        dn_base[P + NA + c] = b_t2dn + c * G
+        dn_stride[P + NA + c] = M * Pg           # one port per pod
     down_tbl = np.zeros((nsw, N), np.int32)
     down_tbl[:P] = b_t0dn + np.arange(N, dtype=np.int32)[None, :]
     for s1 in range(NA):
@@ -186,37 +236,69 @@ def build_topology(tree: FatTreeConfig) -> Topology:
         down_tbl[P + NA + c] = b_t2dn + c * G + node_rack // Pg
 
     # ---- ports ----
+    sw_of_q = np.zeros(nq, np.int32)
     for r in range(P):
         for a in range(U1):
             q = r * U1 + a
             kind[q], rack[q], aux[q] = KIND_T0_UP, r, a
             nbr[q] = P + ((r // Pg) * U1 + a if three else a)
+            sw_of_q[q] = r
     for s1 in range(NA):
         for j in range(U2):
             q = b_t1up + s1 * U2 + j
             kind[q], rack[q], aux[q] = KIND_T1_UP, s1, j
             nbr[q] = P + NA + (s1 % U1) * U2 + j
+            sw_of_q[q] = P + s1
     for c in range(C):
         for g in range(G):
             q = b_t2dn + c * G + g
             kind[q], rack[q], aux[q] = KIND_T2_DOWN, c, g
             nbr[q] = P + g * U1 + c // U2
+            sw_of_q[q] = P + NA + c
     for s1 in range(NA):
         for i in range(Pg):
             q = b_t1dn + s1 * Pg + i
             r = (s1 // U1) * Pg + i if three else i
             kind[q], rack[q], aux[q] = KIND_T1_DOWN, r, s1
             nbr[q] = r
+            sw_of_q[q] = P + s1
     for n in range(N):
         q = b_t0dn + n
         kind[q], rack[q], aux[q] = KIND_T0_DOWN, n // M, n
+        sw_of_q[q] = n // M
     for n in range(N):
         e = nq + n
         kind[e], rack[e], aux[e] = KIND_SENDER, n // M, n
         nbr[e] = n // M
 
+    # ---- compact enqueue emitters + per-switch fan-in groups ----
+    # Ascending emitter order inside each group: the enqueue rank of an
+    # emitter is the count of *smaller-id* emitters enqueueing to the same
+    # queue, and same-queue emitters always share a feeding switch, so the
+    # in-group slot order reproduces the global emitter order exactly.
+    # Groups index the *compact* enumeration (also ascending, so the order
+    # argument carries over verbatim): the whole enqueue path then runs on
+    # EQ = ne - N rows instead of ne.
+    enq_ids = np.where(nbr >= 0)[0].astype(np.int32)
+    eq = len(enq_ids)
+    compact = np.full(ne, eq, np.int32)
+    compact[enq_ids] = np.arange(eq, dtype=np.int32)
+    fan = [[] for _ in range(nsw)]
+    for e in enq_ids:
+        fan[nbr[e]].append(int(compact[e]))
+    fan_max = max(len(g) for g in fan)
+    in_tbl = np.full((nsw, fan_max), eq, np.int32)
+    in_pos = np.zeros(eq, np.int32)
+    for s, group in enumerate(fan):
+        for k, j in enumerate(group):
+            in_tbl[s, k] = j
+            in_pos[j] = s * fan_max + k
+
     return Topology(tree=tree, n_queues=nq, n_emitters=ne, n_switches=nsw,
                     kind=kind, rack=rack, aux=aux, nbr_sw=nbr,
                     sw_tier=sw_tier, sw_lo=sw_lo, sw_hi=sw_hi,
                     sw_up_base=sw_up_base, sw_up_cnt=sw_up_cnt,
-                    sw_salt=sw_salt, down_tbl=down_tbl)
+                    sw_salt=sw_salt, down_tbl=down_tbl,
+                    dn_base=dn_base, dn_stride=dn_stride, sw_of_q=sw_of_q,
+                    enq_ids=enq_ids, fan_max=fan_max, in_tbl=in_tbl,
+                    in_pos=in_pos)

@@ -24,9 +24,18 @@ I32 = jnp.int32
 F32 = jnp.float32
 
 
-def control(dims: Dims, consts: Consts, cc_update, st: SimState) -> SimState:
+def control(dims: Dims, consts: Consts, cc_update, st: SimState,
+            drain=None) -> SimState:
     """Phase 3: ACK / trim / timeout / credit events -> transport state,
-    CC update (``cc_update`` resolved by the registry), LB update."""
+    CC update (``cc_update`` resolved by the registry), LB update.
+
+    ``drain`` is the backend-resolved sent-ring drain callable
+    (``kernels/ring_drain/ops.get``); ``None`` means the pure-jnp
+    reference (the engine passes the ``SimConfig.transport_backend``
+    resolution)."""
+    if drain is None:
+        from repro.kernels.ring_drain import ops as _drain_ops
+        drain = _drain_ops.ring_drain
     t = st.now
     m = st.m
     NF, N, R, W = dims.NF, dims.N, dims.R, dims.W
@@ -39,18 +48,18 @@ def control(dims: Dims, consts: Consts, cc_update, st: SimState) -> SimState:
     # what makes `horizon`'s occupied-slot reduction — and time leaping
     # over the skipped blanket rewrites — sound
     ack_ring = st.ack_ring.at[t % R].set(0)
-    v = acks[:, 0] == 1
-    idxf = jnp.where(v, acks[:, 1], NF)
 
-    # one packed flow-major scatter for all five ACK columns (same indices;
-    # five separate scatters cost ~5x the XLA:CPU scatter overhead)
-    by_flow = jnp.zeros((NF + 1, 6), I32).at[idxf].set(
-        acks, mode="promise_in_bounds")[:NF]
-    has_ack = by_flow[:, 0] == 1
-    ack_seq = jnp.where(has_ack, by_flow[:, 2], 0)
+    # flow-major ACK view as a *gather*: flow f's ACKs can only ever come
+    # from its own receiver's row (one delivery per receiver per tick, and
+    # the row carries the flow id), so ``acks[dst[f]]`` + a flow-id check
+    # replaces the historical [N] -> [NF] scatter at XLA:CPU gather cost
+    cand = acks[consts.dst]                            # [NF, 6]
+    has_ack = (cand[:, 0] == 1) & (cand[:, 1] == flow_ids)
+    by_flow = jnp.where(has_ack[:, None], cand, 0)
+    ack_seq = by_flow[:, 2]
     ack_ecn = has_ack & (by_flow[:, 3] == 1)
-    ack_ent = jnp.where(has_ack, by_flow[:, 4], 0)
-    ack_ts = jnp.where(has_ack, by_flow[:, 5], 0)
+    ack_ent = by_flow[:, 4]
+    ack_ts = by_flow[:, 5]
     rtt = jnp.where(has_ack, (t - ack_ts).astype(F32), 0.0)
     ack_bytes = jnp.where(
         has_ack, pkt_size(dims, consts, flow_ids, ack_seq).astype(F32), 0.0)
@@ -63,43 +72,22 @@ def control(dims: Dims, consts: Consts, cc_update, st: SimState) -> SimState:
     trim_ring = st.trim_ring.at[t % R].set(0)
     credit_ring = st.credit_ring.at[t % R].set(0.0)
 
-    # transport: free the ACKed slot, mark trim/timeout losses — all as
-    # dense [NF, W] masks folded into ONE contiguous write of the state
-    # component (XLA:CPU runs a 4K-element fused loop far faster than a
-    # scatter + two slice-updates; sent ring is component-major [3,.,.]:
-    # 0=state, 1=seq, 2=send tick)
-    wbits = jnp.arange(W, dtype=I32)
-    aslot2 = ack_seq % W
-    cur = st.sent[0, flow_ids, aslot2]
-    cur_seq = st.sent[1, flow_ids, aslot2]
-    match = has_ack & (cur != 0) & (cur_seq == ack_seq)
-    st_state = st.sent[0, :NF]
-    freed = match[:, None] & (wbits[None, :] == aslot2[:, None])
-    st_state = jnp.where(freed, 0, st_state)
-
-    # trimmed packets -> lost (awaiting retransmission)
-    bitsel = (lbits[:, wbits // 32] >> (wbits % 32)) & 1      # [NF, W]
-    lost_mask = (bitsel == 1) & (st_state == 1)
-    st_state = jnp.where(lost_mask, 3, st_state)
-
-    # timeouts
+    # transport: free the ACKed slot, mark trim/timeout losses, reduce the
+    # per-flow timeout/spurious/outstanding counts — one packed drain over
+    # the component-major sent ring (kernels/ring_drain; elementwise +
+    # row reductions only, folded into ONE contiguous write of the state
+    # component — the jnp reference and the Pallas kernel are
+    # interchangeable backends)
     started_flows = (t >= consts.t_start) & ~st.done
-    to_mask = (st_state == 1) & \
-        ((t - st.sent[2, :NF]).astype(F32) > consts.rto[:, None]) & \
-        started_flows[:, None]
-    # count a spurious retx when the receiver already has the packet
-    sp_word = st.sent[1, :NF] // 32
-    sp_bit = st.sent[1, :NF] % 32
-    already = ((st.bitmap[:NF][jnp.arange(NF)[:, None], sp_word] >> sp_bit) & 1) == 1
-    m = m._replace(spurious_retx=m.spurious_retx
-                   + jnp.sum((to_mask & already).astype(I32)))
-    st_state = jnp.where(to_mask, 3, st_state)
+    st_state, n_to, spur, un_pkts = drain(
+        t, consts.rto, started_flows, has_ack, ack_seq, lbits,
+        st.bitmap[:NF], st.sent[0, :NF], st.sent[1, :NF], st.sent[2, :NF])
     sent = st.sent.at[0, :NF].set(st_state)
-    n_to = jnp.sum(to_mask.astype(I32), axis=1)
+    m = m._replace(spurious_retx=m.spurious_retx + jnp.sum(spur))
     to_bytes = n_to.astype(F32) * MTU
     m = m._replace(n_to=m.n_to + jnp.sum(n_to))
 
-    unacked = jnp.sum((st_state == 1).astype(I32), axis=1).astype(F32) * MTU
+    unacked = un_pkts.astype(F32) * MTU
 
     ev = CCEvent(
         has_ack=has_ack, ack_bytes=ack_bytes, ecn=ack_ecn, rtt=rtt,

@@ -65,6 +65,17 @@ def test_leap_bit_for_bit_windowed_alltoall(backend):
     _assert_leap_equal(TREE, wl, max_ticks=60000, cc_backend=backend)
 
 
+def test_leap_bit_for_bit_pallas_fabric_transport():
+    """Leap parity with the fabric enqueue-rank/arbitration and transport
+    ring-drain kernels on the pallas backend: the leap's no-op-tick
+    contract has to hold through the kernels' padded tiles too (a padded
+    lane that wrote anything would break bitwise equality here)."""
+    wl = workloads.permutation(OVERSUB, size_bytes=32 * 4096, seed=1)
+    st = _assert_leap_equal(OVERSUB, wl, fabric_backend="pallas",
+                            transport_backend="pallas")
+    assert int(st.m.n_trim) > 0
+
+
 def test_leap_bit_for_bit_sparse_heavy_tailed():
     """The perf target: spread-out arrivals with heavy-tailed sizes keep
     the fabric quiescent most of the span — exactly where the leap engine

@@ -1,16 +1,23 @@
-"""Engine-level backend parity: the Pallas cc_update kernel wired into the
-simulator hot loop must be bit-for-bit interchangeable with the pure-jnp
-update (interpret mode on CPU; same contract compiled on TPU)."""
+"""Engine-level backend parity: the Pallas kernels wired into the
+simulator hot loop (cc_update, the fused enqueue-rank + arbitration
+kernel, the packed sent-ring drain) must be bit-for-bit interchangeable
+with the pure-jnp phases (interpret mode on CPU; same contract compiled
+on TPU)."""
 
+import jax
 import numpy as np
 import pytest
 
 from repro.core import registry
+from repro.kernels.enqueue_arb import ops as enqueue_arb_ops
+from repro.kernels.ring_drain import ops as ring_drain_ops
 from repro.netsim.engine import SimConfig, build, summarize
 from repro.netsim.units import FatTreeConfig, LinkConfig
 from repro.netsim import workloads
 
 TREE = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=2)
+TREE_3T = FatTreeConfig(racks=4, nodes_per_rack=2, uplinks=2,
+                        pods=2, core_uplinks=2)
 
 
 def _run(backend):
@@ -20,6 +27,14 @@ def _run(backend):
     st = sim.run(max_ticks=20000)
     st.now.block_until_ready()
     return sim, st
+
+
+def _assert_states_equal(st_a, st_b):
+    la, _ = jax.tree.flatten(st_a)
+    lb, _ = jax.tree.flatten(st_b)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_pallas_backend_matches_jnp_bit_for_bit():
@@ -35,6 +50,53 @@ def test_pallas_backend_matches_jnp_bit_for_bit():
                                   np.asarray(st_p.cc.cwnd))
     assert int(st_j.now) == int(st_p.now)
     assert s_j["trims"] == s_p["trims"] and s_j["acks"] == s_p["acks"]
+
+
+def _run_fixed(tree, *, fabric_backend, transport_backend, ticks, wl=None,
+               **cfg):
+    if wl is None:
+        wl = workloads.permutation(tree, size_bytes=32 * 1024, seed=2)
+    sim = build(SimConfig(link=LinkConfig(), tree=tree, algo="smartt",
+                          fabric_backend=fabric_backend,
+                          transport_backend=transport_backend, **cfg), wl)
+    st = sim.run(max_ticks=ticks)
+    st.now.block_until_ready()
+    return st
+
+
+@pytest.mark.parametrize("tree", [TREE, TREE_3T], ids=["2tier", "3tier"])
+def test_fabric_transport_pallas_matches_jnp_bit_for_bit(tree):
+    """The fused enqueue-rank/arbitration kernel and the packed ring-drain
+    kernel, engine-deep: every SimState leaf bitwise equal to the jnp
+    phases after a full permutation run (2-tier and 3-tier fabrics)."""
+    st_j = _run_fixed(tree, fabric_backend="jnp", transport_backend="jnp",
+                      ticks=6000)
+    st_p = _run_fixed(tree, fabric_backend="pallas",
+                      transport_backend="pallas", ticks=6000)
+    _assert_states_equal(st_j, st_p)
+
+
+def test_pallas_drain_timeout_path_matches_jnp():
+    """Trimming off forces losses to recover via RTO — the lost/timeout
+    lanes of the ring-drain kernel, not just the ACK-free path."""
+    wl = workloads.incast(TREE, degree=3, size_bytes=8 * 4096, seed=1)
+    st_j = _run_fixed(TREE, fabric_backend="jnp", transport_backend="jnp",
+                      ticks=8000, wl=wl, trimming=False)
+    st_p = _run_fixed(TREE, fabric_backend="pallas",
+                      transport_backend="pallas", ticks=8000, wl=wl,
+                      trimming=False)
+    _assert_states_equal(st_j, st_p)
+
+
+def test_kernel_ops_backend_resolution():
+    for mod in (enqueue_arb_ops, ring_drain_ops):
+        with pytest.raises(KeyError):
+            mod.get("cuda")
+        with pytest.raises(KeyError):
+            mod.get("")
+    enq, arb = enqueue_arb_ops.get("jnp")
+    assert callable(enq) and callable(arb)
+    assert callable(ring_drain_ops.get("pallas"))
 
 
 def test_registry_backend_resolution():

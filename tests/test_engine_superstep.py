@@ -50,6 +50,17 @@ def test_superstep_bit_for_bit_equals_k1(backend):
         _assert_state_equal(st1, stk)
 
 
+def test_superstep_bit_for_bit_pallas_fabric_transport():
+    """Fused K>1 vs K=1 with the enqueue-rank/arbitration and ring-drain
+    kernels on the pallas backend — the cond-gated superstep body must
+    compose with the kernel call graph exactly as with the jnp refs."""
+    wl = workloads.incast(TREE, degree=3, size_bytes=8 * 4096, seed=0)
+    kw = dict(fabric_backend="pallas", transport_backend="pallas")
+    _, st1 = _run(TREE, wl, superstep=1, **kw)
+    _, stk = _run(TREE, wl, superstep=0, **kw)
+    _assert_state_equal(st1, stk)
+
+
 def test_superstep_exact_under_congestion_and_trimming():
     """An oversubscribed permutation exercises trims, retransmissions, and
     RED marking; the fused loop must still match K=1 exactly."""

@@ -82,6 +82,21 @@ def test_conservation_with_dead_and_degraded_core_links():
     assert int(st.m.n_black) > 0, "dead core uplink never blackholed"
 
 
+@pytest.mark.parametrize("trimming", [True, False],
+                         ids=["trim", "drop"])
+def test_conservation_pallas_fabric_transport(trimming):
+    """The ledger must close identically when the enqueue-rank/arbitration
+    and ring-drain kernels run on the pallas backend (interpret mode on
+    CPU) — the kernels sit exactly on the enqueue/trim and ACK-drain
+    edges the ledger counts."""
+    wl = workloads.incast(TREE2, degree=6, size_bytes=16 * 4096, seed=0)
+    st = _check_conservation(TREE2, wl, 300, trimming=trimming,
+                             fabric_backend="pallas",
+                             transport_backend="pallas")
+    lost = int(st.m.n_trim) if trimming else int(st.m.n_drop)
+    assert lost > 0, "scenario was meant to overflow queues"
+
+
 def test_conservation_eqds_credit_path():
     """Credit-based EQDS adds grant/credit rings; data-packet conservation
     must be untouched by the control plane."""

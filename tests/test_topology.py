@@ -154,7 +154,7 @@ def _check_routing(tree: FatTreeConfig, n_ents=32, rng=None):
         if not live.any():
             continue
         sw = nbr_q[q[live]]
-        down = np.asarray(consts.down_tbl)[sw, np.broadcast_to(
+        down = topo.down_tbl[sw, np.broadcast_to(
             np.asarray(consts.dst)[:, None], q.shape)[live]]
         is_down = nxt[live] == down
         in_up_run = (nxt[live] >= up_base[sw]) & \
@@ -211,6 +211,74 @@ def test_topology_structure(tree):
         assert topo.kind[q] == KIND_T1_UP
         q = topo.t2_down(t.n_cores - 1, t.pods - 1)
         assert topo.kind[q] == KIND_T2_DOWN
+
+
+@pytest.mark.parametrize("tree", RANDOM_TREES,
+                         ids=[f"t{t.tiers}_{t.n_nodes}n" for t in RANDOM_TREES])
+def test_run_length_down_routing_equals_dense_table(tree):
+    """The closed-form dn_base + d // dn_stride lookup must reproduce the
+    dense down_tbl for every node *inside* each switch's subtree (the only
+    place routing ever goes down), at every tier."""
+    topo = build_topology(tree)
+    n = tree.n_nodes
+    d = np.arange(n, dtype=I32)
+    for sw in range(topo.n_switches):
+        run = topo.dn_base[sw] + d // topo.dn_stride[sw]
+        inside = (d >= topo.sw_lo[sw]) & (d < topo.sw_hi[sw])
+        np.testing.assert_array_equal(run[inside], topo.down_tbl[sw][inside])
+        # and the ports it names are real queues of this switch's blocks
+        assert np.all((run[inside] >= 0) & (run[inside] < topo.n_queues))
+
+
+@pytest.mark.parametrize("tree", RANDOM_TREES,
+                         ids=[f"t{t.tiers}_{t.n_nodes}n" for t in RANDOM_TREES])
+def test_fan_in_tables_invert_nbr_sw(tree):
+    """enq_ids/in_tbl/in_pos are a faithful, ascending-ordered compact
+    inverse of nbr_sw: enq_ids enumerates exactly the switch-facing
+    emitters in id order, every compact index appears in exactly one
+    group slot of its feeding switch, in_pos names that slot, and group
+    sizes never exceed fan_max."""
+    topo = build_topology(tree)
+    nsw, dmax = topo.n_switches, topo.fan_max
+    eq = len(topo.enq_ids)
+    # compact enumeration: exactly the switch-facing emitters, ascending
+    np.testing.assert_array_equal(topo.enq_ids,
+                                  np.where(topo.nbr_sw >= 0)[0])
+    assert topo.in_tbl.shape == (nsw, dmax)
+    assert topo.in_pos.shape == (eq,)
+    seen = np.zeros(eq, bool)
+    for sw in range(nsw):
+        row = topo.in_tbl[sw]
+        real = row[row < eq]
+        # ascending compact indices (== ascending emitter ids), pads
+        # (== eq) only at the tail
+        assert np.all(np.diff(real) > 0)
+        assert np.all(row[len(real):] == eq)
+        for k, j in enumerate(real):
+            assert topo.nbr_sw[topo.enq_ids[j]] == sw
+            assert topo.in_pos[j] == sw * dmax + k
+            assert not seen[j]
+            seen[j] = True
+    assert seen.all()
+    assert dmax == max(np.sum(topo.nbr_sw == sw) for sw in range(nsw))
+
+
+@pytest.mark.parametrize("tree", RANDOM_TREES,
+                         ids=[f"t{t.tiers}_{t.n_nodes}n" for t in RANDOM_TREES])
+def test_sw_of_q_names_owning_switch(tree):
+    """Every queue's owning switch covers it: the queue appears among the
+    output ports enumerated for that switch tier, and destinations routed
+    *down* through it stay inside the switch's subtree interval."""
+    topo = build_topology(tree)
+    assert topo.sw_of_q.shape == (topo.n_queues,)
+    assert np.all((topo.sw_of_q >= 0) & (topo.sw_of_q < topo.n_switches))
+    # the down-run of each switch lands only on queues it owns
+    for sw in range(topo.n_switches):
+        d = np.arange(topo.sw_lo[sw], topo.sw_hi[sw])
+        if len(d) == 0:
+            continue
+        q = topo.dn_base[sw] + d // topo.dn_stride[sw]
+        np.testing.assert_array_equal(topo.sw_of_q[q], sw)
 
 
 def test_fat_tree_config_validation():
