@@ -25,11 +25,20 @@ annotation (and a plain line for local runs).  Exit code stays 0 —
 machine-speed drift on shared CI runners makes a hard gate flakier than
 it is useful; the ledger itself is the reviewed artifact.
 
+The fleet-scale Study rows (section ``study_throughput`` —
+``benchmarks.study_throughput``; lanes/sec per forced host-device count
+plus cold/warm cache wall time) compare with::
+
+  python -m benchmarks.check_regression --fresh fresh.json \
+      --ledger BENCH_netsim.json --section study_throughput \
+      --metric lanes_per_sec
+
 ``--require`` takes comma-separated row-name prefixes that must match at
 least one *compared* row (present in both documents) — CI passes the
-three-tier and pallas-backend families here, so a refactor that silently
-drops those rows from the quick bench warns instead of shrinking
-coverage unnoticed.
+three-tier and pallas-backend families here (and the ``d<N>``/``cache``
+study-throughput families in the multidevice job), so a refactor that
+silently drops those rows from the quick bench warns instead of
+shrinking coverage unnoticed.
 """
 
 from __future__ import annotations

@@ -1,0 +1,207 @@
+"""Fleet-scale Study throughput: lanes/sec vs forced host-device count,
+plus cold/warm result-cache wall time (DESIGN.md Sec. 7).
+
+Device count is fixed at process start (XLA reads
+``--xla_force_host_platform_device_count`` before the first jax import),
+so every measurement runs in a *worker subprocess* launched with its own
+``XLA_FLAGS``; the parent only orchestrates and writes the ledger.
+
+Two row families land in ``BENCH_netsim.json`` under
+``sections.study_throughput``:
+
+- ``<scenario>/d<D>``: one Study (base point x S seeds) sharded over D
+  forced host devices — steady-state (post-compile) wall, lanes/sec, and
+  the full final-state pytree digest.  The parent *hard-fails* unless
+  every D produces the same digest as D=1: bit-identical sharding is an
+  acceptance property, not a perf number.
+- ``<scenario>/cache/{cold,warm}``: the same Study run against a fresh
+  content-addressed cache (cold: every lane computed + written back)
+  and then re-run (warm: every lane a hit, zero recomputed).  The warm
+  row records ``speedup_vs_cold``; the acceptance floor is 10x.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.study_throughput            # full
+  PYTHONPATH=src python -m benchmarks.study_throughput --quick    # CI
+      [--scenario NAME] [--seeds N] [--devices 1,2,4,8]
+      [--json-path PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_MARK = "STUDY_THROUGHPUT_RESULT "
+
+
+# --------------------------------------------------------------------------
+# worker side (runs with XLA_FLAGS already set by the parent)
+# --------------------------------------------------------------------------
+
+
+def _worker_shard(scenario: str, n_seeds: int) -> dict:
+    import jax
+
+    from repro.netsim import api, cache, shard
+
+    n_dev = jax.device_count()
+    st = api.study(scenario, seeds=tuple(range(n_seeds)))
+    mesh = shard.lane_mesh() if n_dev > 1 else None
+    first = st.run(mesh=mesh)           # compile + run
+    steady = st.run(mesh=mesh)          # reuses the jit cache
+    return dict(
+        devices=n_dev, lanes=st.n_lanes,
+        wall_first_s=round(first.wall_s, 4),
+        wall_s=round(steady.wall_s, 4),
+        lanes_per_sec=round(st.n_lanes / steady.wall_s, 3),
+        digest=cache.state_digest(steady.states),
+    )
+
+
+def _worker_cache(scenario: str, n_seeds: int) -> dict:
+    from repro.netsim import api, cache
+
+    st = api.study(scenario, seeds=tuple(range(n_seeds)))
+    root = tempfile.mkdtemp(prefix="netsim_cache_bench_")
+    try:
+        rc = cache.ResultCache(root)
+        cold = st.run(cache=rc)
+        warm = st.run(cache=rc)
+        return dict(
+            lanes=st.n_lanes,
+            cold_wall_s=round(cold.wall_s, 4),
+            warm_wall_s=round(warm.wall_s, 4),
+            cold_hits=cold.cache_hits, cold_misses=cold.cache_misses,
+            warm_hits=warm.cache_hits, warm_misses=warm.cache_misses,
+            speedup=round(cold.wall_s / max(warm.wall_s, 1e-9), 2),
+            cold_digest=cache.state_digest(cold.states),
+            warm_digest=cache.state_digest(warm.states),
+        )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def _run_worker(mode: str, scenario: str, n_seeds: int,
+                devices: int = 1) -> dict:
+    """Launch one measurement subprocess with its own device count and
+    parse its ``STUDY_THROUGHPUT_RESULT`` line."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={devices}"
+                        ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO_ROOT, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    cmd = [sys.executable, "-m", "benchmarks.study_throughput", "--worker",
+           mode, "--scenario", scenario, "--seeds", str(n_seeds)]
+    proc = subprocess.run(cmd, cwd=REPO_ROOT, env=env, text=True,
+                          capture_output=True, timeout=3600)
+    for line in reversed(proc.stdout.splitlines()):
+        if line.startswith(_MARK):
+            return json.loads(line[len(_MARK):])
+    raise RuntimeError(
+        f"worker ({mode}, d={devices}) produced no result line\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+
+
+# --------------------------------------------------------------------------
+# parent side
+# --------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true",
+                   help="CI smoke: tiny scenario, D in {1,2}")
+    p.add_argument("--scenario", default=None)
+    p.add_argument("--seeds", type=int, default=None)
+    p.add_argument("--devices", default=None,
+                   help="comma-separated forced host-device counts")
+    p.add_argument("--json-path", default=None)
+    p.add_argument("--worker", default=None, choices=("shard", "cache"),
+                   help=argparse.SUPPRESS)
+    args = p.parse_args(argv)
+
+    scenario = args.scenario or ("tiny_3t" if args.quick else "perm_512n_3t")
+    n_seeds = args.seeds or (3 if args.quick else 8)
+
+    if args.worker:
+        fn = _worker_shard if args.worker == "shard" else _worker_cache
+        print(_MARK + json.dumps(fn(scenario, n_seeds)))
+        return 0
+
+    from benchmarks.common import emit, write_bench_json
+
+    devices = ([int(d) for d in args.devices.split(",")] if args.devices
+               else ([1, 2] if args.quick else [1, 2, 4, 8]))
+    rows = []
+    t0 = time.time()
+
+    base_digest = None
+    for d in devices:
+        r = _run_worker("shard", scenario, n_seeds, devices=d)
+        name = f"{scenario}/d{d}"
+        rows.append(dict(name=name, scenario=scenario, devices=r["devices"],
+                         lanes=r["lanes"], wall_s=r["wall_s"],
+                         wall_first_s=r["wall_first_s"],
+                         lanes_per_sec=r["lanes_per_sec"],
+                         digest=r["digest"]))
+        emit(name, r["wall_s"],
+             f"{r['lanes_per_sec']:.2f} lanes/s on {r['devices']} dev")
+        if base_digest is None:
+            base_digest = r["digest"]
+        elif r["digest"] != base_digest:
+            print(f"::error title=shard parity::{name} final-state digest "
+                  f"{r['digest'][:12]} != d{devices[0]} "
+                  f"{base_digest[:12]} — sharded run is NOT bit-identical")
+            raise SystemExit(1)
+    print(f"# shard parity: {len(devices)} device counts, one digest "
+          f"{base_digest[:12]}…")
+
+    c = _run_worker("cache", scenario, n_seeds, devices=1)
+    if c["cold_digest"] != c["warm_digest"] or \
+            c["cold_digest"] != base_digest:
+        print("::error title=cache parity::cold/warm digests diverge from "
+              "the uncached run")
+        raise SystemExit(1)
+    if c["warm_misses"] != 0:
+        print(f"::error title=cache resume::warm run recomputed "
+              f"{c['warm_misses']} lane(s); expected 0")
+        raise SystemExit(1)
+    rows.append(dict(name=f"{scenario}/cache/cold", scenario=scenario,
+                     lanes=c["lanes"], wall_s=c["cold_wall_s"],
+                     lanes_per_sec=round(c["lanes"] / c["cold_wall_s"], 3),
+                     cache_hits=c["cold_hits"],
+                     cache_misses=c["cold_misses"]))
+    rows.append(dict(name=f"{scenario}/cache/warm", scenario=scenario,
+                     lanes=c["lanes"], wall_s=c["warm_wall_s"],
+                     lanes_per_sec=round(c["lanes"] / c["warm_wall_s"], 3),
+                     cache_hits=c["warm_hits"],
+                     cache_misses=c["warm_misses"],
+                     speedup_vs_cold=c["speedup"]))
+    emit(f"{scenario}/cache/cold", c["cold_wall_s"],
+         f"{c['cold_misses']} lanes computed")
+    emit(f"{scenario}/cache/warm", c["warm_wall_s"],
+         f"{c['warm_hits']} hits, {c['speedup']}x vs cold")
+    if c["speedup"] < 10.0:
+        print(f"::warning title=cache speedup::warm cache only "
+              f"{c['speedup']}x faster than cold (acceptance floor: 10x)")
+
+    path = write_bench_json("study_throughput", rows, path=args.json_path,
+                            meta=dict(scenario=scenario, seeds=n_seeds,
+                                      note="workers forced device counts "
+                                           "via XLA_FLAGS"))
+    print(f"# wrote {len(rows)} rows to {path} in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

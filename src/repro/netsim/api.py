@@ -32,6 +32,18 @@ Results come back typed: :class:`RunResult` (per-lane summary, Jain
 fairness, FCT slowdowns) and :class:`StudyResult` (point-major lane grid,
 tidy-row export for the fig scripts and the benchmark ledger).
 
+Fleet-scale execution (DESIGN.md Sec. 7) layers three orthogonal knobs
+onto ``Study.run`` without touching the fast path:
+
+* ``mesh=`` shards the lane batch across devices
+  (``netsim/shard.py`` — bit-identical to the single-device vmap path);
+* ``cache=`` reuses lanes by content address
+  (``netsim/cache.py`` — keyed ``(scenario, point, seed, code_digest)``,
+  so re-running a sweep with 3 new points recomputes only ``3*S`` lanes);
+* ``chunk_lanes=`` runs the missing lanes in chunks, flushing each
+  finished chunk to the cache — a killed grid resumes from the last
+  completed chunk, bit-equal to an uninterrupted run.
+
 ``engine.build(cfg, wl).run(...)`` and ``sweep.build_sweep(...)`` remain
 as thin compatibility wrappers over the same machinery.
 """
@@ -39,7 +51,6 @@ as thin compatibility wrappers over the same machinery.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Mapping, Sequence
 
@@ -47,7 +58,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.netsim import engine, metrics, scenarios, state
+from repro.netsim import cache as cache_mod
+from repro.netsim import engine, scenarios, shard, state
 from repro.netsim.metrics import jain_fairness
 from repro.netsim.scenarios import Scenario
 
@@ -148,56 +160,13 @@ def _stack_consts(consts_list: Sequence[state.Consts], repeats: int):
 
 
 # --------------------------------------------------------------------------
-# the lane run loop
+# the lane run loop (moved to netsim/shard.py; compat re-export)
 # --------------------------------------------------------------------------
 
-
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
-                   donate_argnums=(6,))
-def _run_lanes(step_fn, horizon_fn, axes, max_ticks: int, superstep: int,
-               consts_b, states: state.SimState) -> state.SimState:
-    """Run a ``[B]`` lane batch to completion under one compiled step.
-
-    Each lane is gated on its *own* exit predicate — the same scalar
-    ``(now < max_ticks) & ~all(done)`` the standalone loop uses — so a
-    finished lane freezes (its gated tick is the identity, bitwise) while
-    the rest keep stepping, and every lane's final state equals its
-    standalone ``Sim.run`` bit-for-bit, ``now`` included.  With
-    ``horizon_fn`` the loop leaps **per lane**: each lane jumps by its own
-    next-event distance under its own swept ``Consts`` (clamped to its
-    remaining budget, zero once the lane is done), so sparse lanes skip
-    their quiescent stretches without waiting on busy lanes (DESIGN.md
-    Sec. 6.3).  The superstep structure (leap once, then K gated ticks per
-    while iteration) matches ``engine._superstep_loop`` exactly.
-
-    ``states`` is donated; ``consts_b`` is not (reused across calls).
-    """
-    def lane_live(st):
-        return (st.now < max_ticks) & ~jnp.all(st.done)
-
-    def lane_tick(c, st):
-        return jax.lax.cond(lane_live(st), lambda s: step_fn(c, s),
-                            lambda s: s, st)
-
-    vtick = jax.vmap(lane_tick, in_axes=(axes, 0))
-
-    def cond(st):
-        return jnp.any((st.now < max_ticks) & ~jnp.all(st.done, axis=-1))
-
-    leap = None
-    if horizon_fn is not None:
-        vhorizon = jax.vmap(horizon_fn, in_axes=(axes, 0))
-        vlive = jax.vmap(lane_live)
-
-        def leap(st):
-            d = jnp.minimum(vhorizon(consts_b, st), max_ticks - st.now)
-            d = jnp.where(vlive(st), d, 0)
-            occ = jnp.sum(st.q_size[:, :-1], axis=1)
-            return st._replace(now=st.now + d,
-                               m=metrics.leap_account(st.m, d, occ))
-
-    return engine._superstep_loop(lambda st: vtick(consts_b, st), cond,
-                                  superstep, leap)(states)
+# The per-lane gated/leaping superstep loop and its single-device jit now
+# live in ``netsim/shard.py`` next to the shard_map execution path, so
+# both share one loop body.  Kept under the historical name for callers.
+_run_lanes = shard._run_lanes
 
 
 # --------------------------------------------------------------------------
@@ -413,6 +382,8 @@ class StudyResult:
     results: tuple            # P*S RunResults, lane = p*S + s
     states: state.SimState    # [P*S]-batched final states
     wall_s: float
+    cache_hits: int = 0       # lanes served from the result cache
+    cache_misses: int = 0     # lanes actually computed (when caching)
 
     def __len__(self) -> int:
         return len(self.results)
@@ -444,11 +415,20 @@ class StudyResult:
         return [r.row() for r in self.results]
 
     def best(self, metric: str = "completion") -> RunResult:
-        """Lane minimizing ``metric`` (unfinished lanes rank last)."""
-        def key(r):
+        """Lane minimizing ``metric``.  Unfinished lanes rank *strictly*
+        last regardless of their metric value (an unfinished lane's
+        partial completion/FCT can look arbitrarily good — including the
+        0 / -1 / NaN sentinels — and must never beat a finished lane);
+        sentinel values (negative, NaN) rank last within each group, and
+        exact ties resolve to the lowest lane index (stable)."""
+        def key(lane_r):
+            lane, r = lane_r
             v = getattr(r, metric)
-            return (not r.all_done, v if v >= 0 else np.inf)
-        return min(self.results, key=key)
+            v = float(v)
+            if not (v >= 0):          # negative sentinel or NaN
+                v = np.inf
+            return (not r.all_done, v, lane)
+        return min(enumerate(self.results), key=key)[1]
 
     def __repr__(self) -> str:
         return (f"StudyResult({self.scenario}: {self.n_points} points x "
@@ -486,49 +466,156 @@ class Study:
     def n_lanes(self) -> int:
         return len(self.salts)
 
-    def init(self) -> state.SimState:
-        """The ``[P*S]`` tick-0 lane batch: one vmapped ``init_state``
-        trace over the batched Consts, then the per-lane seed salts.
-        Every leaf is a fresh buffer (donation-safe)."""
+    def _max_ticks(self, max_ticks) -> int:
+        return int(max_ticks if max_ticks is not None
+                   else self.scenario.max_ticks)
+
+    def lane_point_seed(self, lane: int) -> tuple:
+        """``(point, seed)`` of one point-major lane index."""
+        return self.points[lane // self.n_seeds], self.salts[lane]
+
+    def _consts_subset(self, lanes: np.ndarray):
+        """Batched Consts restricted to ``lanes`` (swept leaves row-
+        gathered, deduped leaves untouched)."""
+        leaves, treedef = jax.tree_util.tree_flatten(self.consts_b)
+        sub = [jnp.take(x, jnp.asarray(lanes), axis=0) if a == 0 else x
+               for x, a in zip(leaves, shard.axes_leaves(self.axes))]
+        return jax.tree_util.tree_unflatten(treedef, sub)
+
+    def _init_lanes(self, consts_sub, salts) -> state.SimState:
+        """A tick-0 batch for an arbitrary lane subset: one vmapped
+        ``init_state`` trace over the subset Consts, then the subset's
+        seed salts.  Every leaf is a fresh buffer (donation-safe)."""
         dims = self.sim.dims
         states = jax.vmap(lambda c: state.init_state(dims, c),
                           in_axes=(self.axes,),
-                          axis_size=self.n_lanes)(self.consts_b)
-        return states._replace(salt=jnp.asarray(self.salts, I32))
+                          axis_size=len(salts))(consts_sub)
+        return states._replace(salt=jnp.asarray(np.asarray(salts), I32))
 
-    def run_states(self, max_ticks: int | None = None) -> state.SimState:
+    def init(self) -> state.SimState:
+        """The full ``[P*S]`` tick-0 lane batch."""
+        return self._init_lanes(self.consts_b, self.salts)
+
+    def run_states(self, max_ticks: int | None = None, *,
+                   mesh=None) -> state.SimState:
         """Run all lanes to completion; one step compile for the grid.
-        The freshly built lane batch is donated to the run loop."""
-        mt = int(max_ticks if max_ticks is not None
-                 else self.scenario.max_ticks)
+        The freshly built lane batch is donated to the run loop.  With
+        ``mesh`` the batch shards across its devices (``shard.run_lanes``
+        — bit-identical to the single-device path)."""
+        mt = self._max_ticks(max_ticks)
         horizon_fn = self.sim.horizon_fn if self.sim.dims.leap else None
-        return _run_lanes(self.sim.step_fn, horizon_fn, self.axes, mt,
-                          self.sim.dims.superstep, self.consts_b, self.init())
+        return shard.run_lanes(self.sim.step_fn, horizon_fn, self.axes, mt,
+                               self.sim.dims.superstep, self.consts_b,
+                               self.init(), mesh=mesh)
 
-    def run(self, max_ticks: int | None = None) -> StudyResult:
-        """Execute the grid and pull typed per-lane results."""
-        mt = int(max_ticks if max_ticks is not None
-                 else self.scenario.max_ticks)
+    def _run_lane_subset(self, lanes, max_ticks: int,
+                         mesh=None) -> state.SimState:
+        """Run only ``lanes`` (absolute point-major indices) and return
+        their ``[len(lanes)]`` final states.  Each lane's trajectory is
+        batch-composition-independent (per-lane gating/leaping), so the
+        result is bit-equal to the same lanes of a full-grid run."""
+        lanes = np.asarray(lanes, np.int64)
+        consts_sub = self._consts_subset(lanes)
+        states = self._init_lanes(consts_sub, np.asarray(self.salts)[lanes])
+        horizon_fn = self.sim.horizon_fn if self.sim.dims.leap else None
+        return shard.run_lanes(self.sim.step_fn, horizon_fn, self.axes,
+                               max_ticks, self.sim.dims.superstep,
+                               consts_sub, states, mesh=mesh)
+
+    def lane_keys(self, max_ticks: int | None = None) -> list:
+        """Content address of every lane (``cache.lane_key``) — the
+        scenario digest is computed once, the code digest per process."""
+        mt = self._max_ticks(max_ticks)
+        sd = cache_mod.scenario_digest(self.scenario, mt)
+        cd = cache_mod.code_digest()
+        return [cache_mod.lane_key(sd, *self.lane_point_seed(lane),
+                                   code_dig=cd)
+                for lane in range(self.n_lanes)]
+
+    def _lane_result(self, lane_st, lane: int, max_ticks: int,
+                     meta: dict) -> "RunResult":
+        pt, seed = self.lane_point_seed(lane)
+        return RunResult.from_state(
+            self.sim, lane_st, scenario=self.scenario.name,
+            point=pt, seed=seed, max_ticks=max_ticks, flow_meta=meta)
+
+    def run(self, max_ticks: int | None = None, *, mesh=None,
+            cache=None, chunk_lanes: int | None = None) -> StudyResult:
+        """Execute the grid and pull typed per-lane results.
+
+        ``mesh``         shard the lane batch across a device mesh
+                         (``shard.lane_mesh()``; default single-device).
+        ``cache``        reuse finished lanes by content address —
+                         ``True`` (default dir), a path, or a
+                         :class:`cache.ResultCache`; only missing lanes
+                         are computed, and every computed lane is written
+                         back.  Hit/miss counts land on the result.
+        ``chunk_lanes``  run missing lanes at most this many at a time,
+                         flushing each finished chunk to the cache — the
+                         checkpoint granularity for resumable grids.
+                         (Chunking alone, without a cache, just bounds
+                         peak batch memory.)
+
+        All three compose, and every combination is bit-equal to the
+        plain single-device, uncached run (tests/test_shard.py,
+        tests/test_cache.py)."""
+        mt = self._max_ticks(max_ticks)
+        rc = cache_mod.resolve(cache)
         t0 = time.time()
-        states = self.run_states(mt)
-        states.now.block_until_ready()
+        if rc is None and chunk_lanes is None:
+            states = self.run_states(mt, mesh=mesh)
+            states.now.block_until_ready()
+            # one bulk device->host transfer; lanes then slice numpy (the
+            # per-lane RunResults would otherwise issue ~25 tiny
+            # transfers per lane)
+            states_h = jax.device_get(states)
+            hits, misses = 0, self.n_lanes
+        else:
+            states_h, hits, misses = self._run_stitched(
+                mt, mesh=mesh, rc=rc, chunk_lanes=chunk_lanes)
         wall = time.time() - t0
-        # one bulk device->host transfer; lanes then slice numpy (the
-        # per-lane RunResults would otherwise issue ~25 tiny transfers
-        # per lane)
-        states_h = jax.device_get(states)
         meta = _flow_meta(self.sim)
-        results = []
-        for pi, pt in enumerate(self.points):
-            for si, seed in enumerate(self.seeds):
-                lane = pi * self.n_seeds + si
-                lane_st = jax.tree.map(lambda x: x[lane], states_h)
-                results.append(RunResult.from_state(
-                    self.sim, lane_st, scenario=self.scenario.name,
-                    point=pt, seed=seed, max_ticks=mt, flow_meta=meta))
+        results = [self._lane_result(jax.tree.map(lambda x: x[lane],
+                                                  states_h),
+                                     lane, mt, meta)
+                   for lane in range(self.n_lanes)]
         return StudyResult(scenario=self.scenario.name, points=self.points,
                            seeds=self.seeds, results=tuple(results),
-                           states=states, wall_s=wall)
+                           states=states_h, wall_s=wall,
+                           cache_hits=hits, cache_misses=misses)
+
+    def _run_stitched(self, mt: int, *, mesh, rc, chunk_lanes):
+        """Cached/chunked execution: look every lane up in the cache,
+        run the misses in chunks (flushing each finished chunk back),
+        and stitch hits + fresh lanes into one host-side ``[P*S]``
+        batch.  Returns ``(states_h, hits, misses)``."""
+        lane_struct = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+            jax.eval_shape(self.init))
+        lane_states = [None] * self.n_lanes
+        keys = self.lane_keys(mt) if rc is not None else None
+        if rc is not None:
+            for lane, key in enumerate(keys):
+                hit = rc.get(key, lane_struct)
+                if hit is not None:
+                    lane_states[lane] = hit[0]
+        missing = [i for i in range(self.n_lanes) if lane_states[i] is None]
+        hits = self.n_lanes - len(missing)
+        meta = _flow_meta(self.sim)
+        step = int(chunk_lanes) if chunk_lanes else max(len(missing), 1)
+        cd = cache_mod.code_digest() if rc is not None else None
+        for lo in range(0, len(missing), step):
+            chunk = missing[lo:lo + step]
+            out_h = jax.device_get(self._run_lane_subset(chunk, mt, mesh))
+            for j, lane in enumerate(chunk):
+                lane_st = jax.tree.map(lambda x: x[j], out_h)
+                lane_states[lane] = lane_st
+                if rc is not None:
+                    res = self._lane_result(lane_st, lane, mt, meta)
+                    rc.put(keys[lane], lane_st, res.row(),
+                           extra=dict(code_digest=cd, name=res.name))
+        states_h = jax.tree.map(lambda *xs: np.stack(xs), *lane_states)
+        return states_h, hits, len(missing)
 
     def __repr__(self) -> str:
         return (f"Study({self.scenario.name}: {self.n_points} points x "

@@ -1,0 +1,273 @@
+"""Content-addressed result cache for Study lanes (DESIGN.md Sec. 7).
+
+Re-running a sweep should only pay for what changed.  Each lane of a
+Study — one ``(scenario, point, seed)`` cell — is keyed by
+
+    lane_key = sha256(scenario_digest · normalized point · seed ·
+                      code_digest)
+
+where ``scenario_digest`` fingerprints everything the lane's trajectory
+depends on (config repr, the full flow table bytes, the tick budget) and
+``code_digest`` fingerprints the simulator source tree itself
+(``repro/netsim`` + ``repro/kernels`` + ``repro/core``, every ``.py``
+file's bytes) — so editing any engine/phase/kernel source invalidates
+every cached lane, while editing tests, benchmarks, or docs does not.
+The engine is deterministic (pure jit, fixed seeds), which is what makes
+final states cacheable by input identity at all.
+
+A hit returns the lane's **full final SimState** (host numpy, bit-exact
+— ``tests/test_cache.py`` asserts digest equality against a fresh run)
+plus the precomputed ``RunResult.row()``; the Study stitches hits and
+fresh lanes into one ``StudyResult`` indistinguishable from an uncached
+run.  Entries are written atomically (tmp + rename), one ``.npz`` (state
+leaves) + ``.json`` (row, state digest, human-readable key fields) pair
+per lane, so a killed grid resumes from every lane already finished
+(``Study.run(chunk_lanes=...)`` flushes per completed chunk).
+
+Stale entries are never wrong, only unused: a key mismatch (new code,
+new point, new budget) simply misses.  ``ResultCache.prune()`` drops
+entries whose recorded code digest is not the current one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.netsim.scenarios import Scenario
+
+# cache format version — bump to orphan every existing entry
+_VERSION = 1
+
+# source trees whose bytes define the simulator's behavior (repro.core
+# carries the CC algorithms; repro.kernels the pallas/jnp backend pairs)
+_CODE_PACKAGES = ("repro.netsim", "repro.kernels", "repro.core")
+
+
+# --------------------------------------------------------------------------
+# digests
+# --------------------------------------------------------------------------
+
+
+def _hash_tree_files(roots) -> str:
+    h = hashlib.sha256()
+    for root in roots:
+        root = Path(root)
+        for p in sorted(root.rglob("*.py")):
+            h.update(str(p.relative_to(root)).encode())
+            h.update(b"\0")
+            h.update(p.read_bytes())
+            h.update(b"\0")
+    return h.hexdigest()
+
+
+@functools.lru_cache(maxsize=1)
+def _default_code_digest() -> str:
+    import importlib
+    roots = []
+    for mod in _CODE_PACKAGES:
+        m = importlib.import_module(mod)
+        # namespace packages (no __init__.py) carry __path__, not __file__
+        roots.extend(Path(p) for p in getattr(m, "__path__", None)
+                     or [Path(m.__file__).parent])
+    return _hash_tree_files(roots)
+
+
+def code_digest(roots=None) -> str:
+    """sha256 over the simulator source tree (sorted relpath + bytes of
+    every ``.py`` under ``repro/{netsim,kernels,core}``, or under the
+    explicit ``roots``).  Any source edit — an algorithm tweak, a kernel
+    fix — changes the digest and orphans every cached lane; the default
+    digest is computed once per process."""
+    if roots is None:
+        return _default_code_digest()
+    return _hash_tree_files(tuple(roots))
+
+
+def _update_value(h, v):
+    """Feed one digest component: arrays by dtype/shape/bytes, dataclasses
+    by stable repr, scalars/strings by repr."""
+    if isinstance(v, np.ndarray):
+        a = np.ascontiguousarray(v)
+        h.update(f"{a.dtype.str}{a.shape}".encode())
+        h.update(a.tobytes())
+    else:
+        h.update(repr(v).encode())
+    h.update(b"\0")
+
+
+def scenario_digest(sc: Scenario, max_ticks: int) -> str:
+    """Fingerprint of everything a lane's trajectory depends on besides
+    (point, seed, code): the scenario name, the full ``SimConfig`` repr
+    (frozen dataclass of primitives/tuples — stable), the workload's flow
+    table bytes, and the effective tick budget."""
+    h = hashlib.sha256()
+    _update_value(h, ("netsim-scenario", _VERSION))
+    _update_value(h, sc.name)
+    _update_value(h, sc.cfg)
+    wl = sc.wl
+    _update_value(h, (wl.name, int(wl.window)))
+    for arr in (wl.src, wl.dst, wl.size, wl.t_start, wl.order):
+        _update_value(h, np.asarray(arr))
+    _update_value(h, int(max_ticks))
+    return h.hexdigest()
+
+
+def lane_key(scenario_dig: str, point, seed: int,
+             code_dig: str | None = None) -> str:
+    """Content address of one Study lane.  ``point`` is the normalized
+    ``((key, value), ...)`` tuple (``api._norm_point``)."""
+    if code_dig is None:
+        code_dig = code_digest()
+    h = hashlib.sha256()
+    _update_value(h, ("netsim-lane", _VERSION))
+    _update_value(h, scenario_dig)
+    _update_value(h, tuple(point))
+    _update_value(h, int(seed))
+    _update_value(h, code_dig)
+    return h.hexdigest()
+
+
+def state_digest(tree) -> str:
+    """sha256 over a (host) state pytree — dtype/shape/bytes of every
+    leaf.  The bit-for-bit equality currency of the parity tests and the
+    cache-integrity check."""
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        _update_value(h, np.asarray(leaf))
+    return h.hexdigest()
+
+
+# --------------------------------------------------------------------------
+# the cache
+# --------------------------------------------------------------------------
+
+
+DEFAULT_DIR_ENV = "NETSIM_CACHE_DIR"
+
+
+def default_root() -> Path:
+    """``$NETSIM_CACHE_DIR`` or ``.netsim_cache`` under the CWD."""
+    return Path(os.environ.get(DEFAULT_DIR_ENV, ".netsim_cache"))
+
+
+@dataclasses.dataclass(eq=False, repr=False)
+class ResultCache:
+    """Directory-backed lane cache: ``<key>.npz`` (final-state leaves, in
+    treedef order) + ``<key>.json`` (row, state digest, key fields).
+
+    Mutable counters ``hits``/``misses``/``puts`` account one ``Study.run``
+    (reset per run by the Study) — surfaced on ``StudyResult`` and in the
+    ``study_throughput`` bench section so the "repeated sweeps are free"
+    claim is measured, not asserted."""
+
+    root: Path
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+
+    def __post_init__(self):
+        self.root = Path(self.root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def reset_counters(self):
+        self.hits = self.misses = self.puts = 0
+
+    def _paths(self, key: str) -> tuple[Path, Path]:
+        return self.root / f"{key}.npz", self.root / f"{key}.json"
+
+    def get(self, key: str, struct):
+        """Look up one lane.  ``struct`` is the lane's ``SimState``
+        shape/dtype skeleton (``jax.eval_shape`` of the init) — entries
+        whose leaves don't match it exactly (layout drift the code digest
+        didn't catch, e.g. partially-written legacy files) are treated as
+        misses.  Returns ``(state, row)`` host-side, or ``None``."""
+        npz_p, json_p = self._paths(key)
+        if not (npz_p.exists() and json_p.exists()):
+            self.misses += 1
+            return None
+        try:
+            meta = json.loads(json_p.read_text())
+            leaves_s, treedef = jax.tree_util.tree_flatten(struct)
+            with np.load(npz_p) as z:
+                leaves = [z[f"leaf_{i}"] for i in range(len(leaves_s))]
+        except Exception:
+            self.misses += 1
+            return None
+        for got, want in zip(leaves, leaves_s):
+            if (got.shape != tuple(want.shape)
+                    or got.dtype != np.dtype(want.dtype)):
+                self.misses += 1
+                return None
+        self.hits += 1
+        return jax.tree_util.tree_unflatten(treedef, leaves), meta["row"]
+
+    def put(self, key: str, lane_state, row: dict, extra: dict | None = None):
+        """Write one finished lane atomically (tmp + rename — a killed
+        writer leaves no partial entry, so resume is always safe)."""
+        npz_p, json_p = self._paths(key)
+        leaves = [np.asarray(x) for x in
+                  jax.tree_util.tree_leaves(lane_state)]
+        meta = dict(version=_VERSION, row=row,
+                    state_digest=state_digest(lane_state),
+                    **(extra or {}))
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".npz.tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **{f"leaf_{i}": x for i, x in enumerate(leaves)})
+            os.replace(tmp, npz_p)
+        except BaseException:
+            os.unlink(tmp)
+            raise
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".json.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(meta, f)
+            os.replace(tmp, json_p)
+        except BaseException:
+            os.unlink(tmp)
+            raise
+        self.puts += 1
+
+    def prune(self, keep_code_dig: str | None = None) -> int:
+        """Drop entries not written under ``keep_code_dig`` (default: the
+        current code digest).  Returns the number of entries removed."""
+        if keep_code_dig is None:
+            keep_code_dig = code_digest()
+        n = 0
+        for json_p in self.root.glob("*.json"):
+            try:
+                meta = json.loads(json_p.read_text())
+            except Exception:
+                meta = {}
+            if meta.get("code_digest") != keep_code_dig:
+                json_p.unlink(missing_ok=True)
+                json_p.with_suffix(".npz").unlink(missing_ok=True)
+                n += 1
+        return n
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.root.glob("*.json"))
+
+    def __repr__(self) -> str:
+        return (f"ResultCache({self.root}: {len(self)} entries, "
+                f"hits={self.hits} misses={self.misses} puts={self.puts})")
+
+
+def resolve(cache) -> ResultCache | None:
+    """Normalize ``Study.run``'s ``cache=`` argument: ``None`` -> no
+    caching, ``True`` -> the default directory, a path -> that directory,
+    a :class:`ResultCache` -> itself."""
+    if cache is None or isinstance(cache, ResultCache):
+        return cache
+    if cache is True:
+        return ResultCache(default_root())
+    return ResultCache(Path(cache))

@@ -107,12 +107,13 @@ class Sim:
     def run_trace(self, ticks: int, trace_flows: int = 8):
         return _run_trace(self.step, self.init(), ticks, trace_flows)
 
-    def run_batch(self, seeds, max_ticks: int) -> SimState:
+    def run_batch(self, seeds, max_ticks: int, mesh=None) -> SimState:
         """vmap a batch of decorrelated runs (per-seed RED/ECMP salts) —
-        a thin compatibility wrapper over the experiment API's lane loop
-        (``api._run_lanes``; one compiled step, per-lane exit gating and
+        a thin compatibility wrapper over the sharded lane loop
+        (``shard.run_lanes``; one compiled step, per-lane exit gating and
         leap horizons, so each lane matches its standalone ``run(seed=s)``
-        bit-for-bit).
+        bit-for-bit).  ``mesh`` (a ``shard.lane_mesh()``) spreads the
+        batch across devices; the default stays single-device vmap.
 
         The init state is built once and broadcast over the batch —
         only the per-seed ``salt`` is scattered (asserted by the
@@ -121,17 +122,18 @@ class Sim:
         """
         import numpy as _np
 
-        from repro.netsim import api
+        from repro.netsim import api, shard
         seeds = jnp.asarray(_np.asarray(seeds), I32)
         base = self.init()
         states = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (seeds.shape[0],) + x.shape),
             base)
         states = states._replace(salt=seeds)
-        return api._run_lanes(self.step_fn,
-                              self.horizon_fn if self.dims.leap else None,
-                              api.no_axes(self.consts), max_ticks,
-                              self.dims.superstep, self.consts, states)
+        return shard.run_lanes(self.step_fn,
+                               self.horizon_fn if self.dims.leap else None,
+                               api.no_axes(self.consts), max_ticks,
+                               self.dims.superstep, self.consts, states,
+                               mesh=mesh)
 
 
 # --------------------------------------------------------------------------

@@ -54,18 +54,44 @@ def route_from_queue(dims: Dims, consts: Consts, flow, ent):
     ``ent`` are [NQ], one head-of-line packet per port; negative ids encode
     delivery to node -(id+1)).  Each port's wire feeds the switch
     ``consts.nbr_q`` names; the last N ports (``consts.edge_q``) feed host
-    NICs and deliver."""
+    NICs and deliver.
+
+    Same decision as :func:`route_switch` at ``sw = nbr_q``, but reading
+    the per-queue tables ``q_*`` (the switch tables pre-gathered through
+    ``nbr_q`` at derive time) — the only per-tick gather left is the
+    flow -> dst lookup, which genuinely varies."""
     d = consts.dst[jnp.clip(flow, 0, dims.NF - 1)]
-    nxt = route_switch(dims, consts, consts.nbr_q, d, ent)
+    down = (d >= consts.q_lo) & (d < consts.q_hi)
+    h = (hashing.hash2(ent.astype(jnp.uint32), consts.q_salt)
+         % jnp.maximum(consts.q_up_cnt, 1).astype(jnp.uint32)).astype(I32)
+    nxt = jnp.where(down, consts.q_dn_base + d // consts.q_dn_stride,
+                    consts.q_up_base + h)
     return jnp.where(consts.edge_q, -(d + 1), nxt)
+
+
+def route_first_hop(dims: Dims, consts: Consts, ent):
+    """First queue for a fresh packet of *every* flow (``ent`` is the
+    [NF] per-flow entropy) — the tick's hot path.  The subtree test and
+    the down queue are workload constants (``f_down`` / ``f_dn_q``), so
+    the whole decision is a gather-free select over [NF] vectors — only
+    the ECMP hash runs per tick."""
+    h = (hashing.hash2(ent.astype(jnp.uint32), consts.f_salt)
+         % jnp.maximum(consts.f_up_cnt, 1).astype(jnp.uint32)).astype(I32)
+    return jnp.where(consts.f_down, consts.f_dn_q, consts.f_up_base + h)
 
 
 def route_from_sender(dims: Dims, consts: Consts, f, ent):
     """First queue for a fresh packet of flow ``f`` carrying entropy
     ``ent``: the routing decision of the sender's rack switch (same-rack
-    shortcut straight to the edge port, ECMP uplink hash otherwise)."""
-    return route_switch(dims, consts, consts.src[f] // dims.M,
-                        consts.dst[f], ent)
+    shortcut straight to the edge port, ECMP uplink hash otherwise).
+    ``f`` and ``ent`` broadcast (the routing property tests walk
+    [NF, 1] x [1, E] grids); the tick itself uses the all-flows
+    :func:`route_first_hop`.  Same per-flow tables, same ints."""
+    h = (hashing.hash2(ent.astype(jnp.uint32), consts.f_salt[f])
+         % jnp.maximum(consts.f_up_cnt[f], 1).astype(jnp.uint32)
+         ).astype(I32)
+    return jnp.where(consts.f_down[f], consts.f_dn_q[f],
+                     consts.f_up_base[f] + h)
 
 
 def route_step(dims: Dims, consts: Consts, q, d, ent):
@@ -97,7 +123,9 @@ def departures(dims: Dims, consts: Consts, st: SimState) -> SimState:
     mark = hashing.uniform01(t * jnp.int32(131071) + qidx,
                              jnp.int32(0xECD) + st.salt) < pmark
     d_ecn = d_ecn | (mark & active).astype(I32)
-    black = consts.dead[qidx] & active & in_fault
+    # dead is already [NQ] in port order — no need to gather it by the
+    # (traced, so not constant-foldable) qidx iota
+    black = consts.dead & active & in_fault
     emit = active & ~black
     next_q = route_from_queue(dims, consts, d_flow, d_ent)
     q_head = st.q_head.at[:NQ].set(jnp.where(active, (head + 1) % CAP, head))
@@ -164,8 +192,12 @@ def arrivals(dims: Dims, consts: Consts, st: SimState,
     bitmap = st.bitmap.at[:NF].set(
         bm + jnp.where(wsel & isnew_f[:, None],
                        (1 << bit_f).astype(I32)[:, None], 0))
-    psz_f = jnp.where(isnew_f, pkt_size(dims, consts, consts.flow_ids,
-                                        seq_f), 0)
+    # pkt_size at the all-flows identity: flow f's size is consts.size[f],
+    # so the defensive flow clip (and its gather by the traced flow_ids
+    # iota) drops out — size the packet directly (bitwise the same ints)
+    psz_f = jnp.where(isnew_f,
+                      jnp.clip(consts.size - seq_f * dims.mtu, 0, dims.mtu),
+                      0)
     goodput = st.goodput + psz_f
     newly_done = (goodput >= consts.size) & ~st.done
     done = st.done | newly_done

@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import reps
-from repro.netsim.fabric import route_from_sender
+from repro.netsim.fabric import route_first_hop
 from repro.netsim.state import HORIZON_INF, Consts, Dims, SimState
 
 I32 = jnp.int32
@@ -151,7 +151,7 @@ def sends(dims: Dims, consts: Consts, st: SimState, arb=None) -> SimState:
     emit_mask = sflow[consts.src] == flow_ids
     lb, entropy = reps.on_send(dims.lb_mode, consts.lb, st.lb, emit_mask,
                                seq_emit, flow_ids, t)
-    first_q = route_from_sender(dims, consts, flow_ids, entropy)
+    first_q = route_first_hop(dims, consts, entropy)
 
     # place on the wire — one dynamic-update-slice over the NIC emitter
     # rows [NQ, NE) at the (uniform) sender latency slot; zeros for idle

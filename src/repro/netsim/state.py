@@ -170,6 +170,27 @@ class Consts(NamedTuple):
     dn_base: jnp.ndarray         # i32 [NSW] down port = dn_base + d // dn_stride
     dn_stride: jnp.ndarray       # i32 [NSW] nodes covered per down port
     sw_of_q: jnp.ndarray         # i32 [NQ] switch owning each queue
+    # -- per-queue routing tables: the switch tables above, pre-gathered
+    #    through ``nbr_q`` at derive time so ``fabric.route_from_queue``
+    #    (the departures hot path) reads [NQ] vectors directly instead of
+    #    issuing seven [NSW] -> [NQ] gathers per tick --
+    q_lo: jnp.ndarray            # i32 [NQ] = sw_lo[nbr_q]
+    q_hi: jnp.ndarray            # i32 [NQ] = sw_hi[nbr_q]
+    q_up_base: jnp.ndarray       # i32 [NQ] = sw_up_base[nbr_q]
+    q_up_cnt: jnp.ndarray        # i32 [NQ] = sw_up_cnt[nbr_q]
+    q_salt: jnp.ndarray          # u32 [NQ] = sw_salt[nbr_q]
+    q_dn_base: jnp.ndarray       # i32 [NQ] = dn_base[nbr_q]
+    q_dn_stride: jnp.ndarray     # i32 [NQ] = dn_stride[nbr_q]
+    # -- per-flow first-hop tables: a fresh packet's routing decision at
+    #    the sender's rack switch is static per flow except for the ECMP
+    #    entropy hash, so ``fabric.route_from_sender`` reduces to a select
+    #    between a precomputed down queue and a hashed up port — zero
+    #    gathers in the sends hot path --
+    f_down: jnp.ndarray          # bool [NF] dst inside the sender's rack
+    f_dn_q: jnp.ndarray          # i32 [NF] the (static) same-rack edge queue
+    f_up_base: jnp.ndarray       # i32 [NF] rack switch's first up port
+    f_up_cnt: jnp.ndarray        # i32 [NF] rack switch's up-port count
+    f_salt: jnp.ndarray          # u32 [NF] rack switch's ECMP salt
     # -- compact enqueue emitters + per-switch fan-in groups (enqueue
     #    ranking and per-queue accept counts, kernels/enqueue_arb) --
     enq_ids: jnp.ndarray         # i32 [EQ] enqueue-capable emitter ids
@@ -376,6 +397,21 @@ def derive(cfg: SimConfig, wl: Workload):
         raise ValueError(f"superstep must be >= 0, got {cfg.superstep}")
     superstep = int(cfg.superstep) or int(tm.brtt_inter)
 
+    # ---- pre-gathered routing tables (per-tick gather hoisting) ----
+    # Per-queue: the seven switch tables route_from_queue needs, indexed
+    # through nbr_q once here instead of every tick (edge rows clamp to
+    # switch 0 exactly like nbr_q itself; edge_q gates them off).
+    # Per-flow: a fresh packet's first hop is decided at the sender's rack
+    # switch sw_f = src // M; the subtree test and the down queue are
+    # workload constants, only the up-port ECMP hash needs the entropy.
+    nbr = np.maximum(np.asarray(topo.nbr_sw[:NQ]), 0)
+    sw_f = np.asarray(wl.src, np.int64) // M
+    f_lo = np.asarray(topo.sw_lo)[sw_f]
+    f_hi = np.asarray(topo.sw_hi)[sw_f]
+    f_down = (wl.dst >= f_lo) & (wl.dst < f_hi)
+    f_dn_q = (np.asarray(topo.dn_base)[sw_f]
+              + np.asarray(wl.dst) // np.asarray(topo.dn_stride)[sw_f])
+
     # Event-horizon time leaping (DESIGN.md Sec. 6.3) is only exact when an
     # event-free tick is a state no-op.  Rate pacing accrues a budget every
     # tick and PLB rolls its round clock on wall time, so those two
@@ -429,6 +465,18 @@ def derive(cfg: SimConfig, wl: Workload):
         dn_base=jnp.asarray(topo.dn_base, I32),
         dn_stride=jnp.asarray(topo.dn_stride, I32),
         sw_of_q=jnp.asarray(topo.sw_of_q, I32),
+        q_lo=jnp.asarray(np.asarray(topo.sw_lo)[nbr], I32),
+        q_hi=jnp.asarray(np.asarray(topo.sw_hi)[nbr], I32),
+        q_up_base=jnp.asarray(np.asarray(topo.sw_up_base)[nbr], I32),
+        q_up_cnt=jnp.asarray(np.asarray(topo.sw_up_cnt)[nbr], I32),
+        q_salt=jnp.asarray(np.asarray(topo.sw_salt)[nbr], jnp.uint32),
+        q_dn_base=jnp.asarray(np.asarray(topo.dn_base)[nbr], I32),
+        q_dn_stride=jnp.asarray(np.asarray(topo.dn_stride)[nbr], I32),
+        f_down=jnp.asarray(f_down),
+        f_dn_q=jnp.asarray(f_dn_q, I32),
+        f_up_base=jnp.asarray(np.asarray(topo.sw_up_base)[sw_f], I32),
+        f_up_cnt=jnp.asarray(np.asarray(topo.sw_up_cnt)[sw_f], I32),
+        f_salt=jnp.asarray(np.asarray(topo.sw_salt)[sw_f], jnp.uint32),
         enq_ids=jnp.asarray(topo.enq_ids, I32),
         in_tbl=jnp.asarray(topo.in_tbl, I32),
         in_pos=jnp.asarray(topo.in_pos, I32),

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core import reps
 from repro.core.types import CCEvent
 from repro.netsim.metrics import HIST_BINS
-from repro.netsim.state import HORIZON_INF, Consts, Dims, SimState, pkt_size
+from repro.netsim.state import HORIZON_INF, Consts, Dims, SimState
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -61,8 +61,13 @@ def control(dims: Dims, consts: Consts, cc_update, st: SimState,
     ack_ent = by_flow[:, 4]
     ack_ts = by_flow[:, 5]
     rtt = jnp.where(has_ack, (t - ack_ts).astype(F32), 0.0)
+    # pkt_size at the all-flows identity (flow_ids is the [0, NF) iota):
+    # read consts.size directly instead of gathering it through the traced
+    # iota — bitwise the same ints
     ack_bytes = jnp.where(
-        has_ack, pkt_size(dims, consts, flow_ids, ack_seq).astype(F32), 0.0)
+        has_ack,
+        jnp.clip(consts.size - ack_seq * dims.mtu, 0, dims.mtu).astype(F32),
+        0.0)
 
     tr = st.trim_ring[t % R][:NF]                      # [NF, 2+WW] packed
     trims = tr[:, 0]

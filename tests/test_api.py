@@ -228,3 +228,62 @@ def test_study_result_rows_are_point_major_and_tidy():
     assert dict(res.lane(2, 1).point) == points[2]
     best = res.best("completion")
     assert best.completion == min(r.completion for r in res)
+
+
+# --------------------------------------------------------------------------
+# best() tie-handling (regression: unfinished lanes must rank strictly
+# last, whatever their partial metric looks like)
+# --------------------------------------------------------------------------
+
+
+def _synthetic_result(fct, done, seed):
+    """A hand-built RunResult with exactly the finished-flow structure
+    the test wants (the derived metrics — completion, slowdown — follow
+    from fct/done)."""
+    nf = len(fct)
+    z = np.zeros(nf, np.int32)
+    return api.RunResult(
+        scenario="syn", algo="smartt", lb="reps", point=(), seed=seed,
+        max_ticks=100, ticks=100, mtu=4096, brtt=10,
+        fct=np.asarray(fct, np.int32), goodput=z,
+        done=np.asarray(done, bool),
+        size=np.full(nf, 4096, np.int32), t_start=z,
+        flow_brtt=np.full(nf, 10.0, np.float32),
+        trims=0, drops=0, blackholed=0, timeouts=0, retx=0, acks=0,
+        spurious_retx=0, delivered_pkts=0, delivered_bytes=0.0,
+        rtt_hist=np.zeros(8, np.int32), q_mean=0.0, q_max=0)
+
+
+def _synthetic_study(results):
+    return api.StudyResult(scenario="syn", points=((),) * len(results),
+                           seeds=(0,), results=tuple(results),
+                           states=None, wall_s=0.0)
+
+
+def test_best_unfinished_lanes_rank_strictly_last():
+    """An unfinished lane whose partial metric looks perfect — e.g. one
+    early flow finished at tick 0, so ``completion == 0`` — must never
+    beat a finished lane, for any metric; sentinel values (-1, NaN) rank
+    last within each group; exact ties resolve to the lowest lane."""
+    unfinished_looks_great = _synthetic_result([0, -1], [True, False],
+                                               seed=0)
+    assert not unfinished_looks_great.all_done
+    assert unfinished_looks_great.completion == 0     # the trap value
+    finished_slow = _synthetic_result([50, 70], [True, True], seed=1)
+    res = _synthetic_study([unfinished_looks_great, finished_slow])
+    assert res.best("completion") is finished_slow
+    assert res.best("fct_mean") is finished_slow
+    # slowdown of the unfinished lane is a -1 sentinel -> ranks last even
+    # against a large finished value
+    assert res.best("slowdown_p99") is finished_slow
+
+    # nothing finished at all: fall back to the metric among unfinished
+    # lanes (the -1 sentinel maps to inf, so real progress wins)
+    part = _synthetic_result([5, -1], [True, False], seed=0)
+    none_ = _synthetic_result([-1, -1], [False, False], seed=1)
+    assert _synthetic_study([none_, part]).best("completion") is part
+
+    # exact tie between finished lanes: stable, lowest lane index
+    twin_a = _synthetic_result([9, 9], [True, True], seed=0)
+    twin_b = _synthetic_result([9, 9], [True, True], seed=1)
+    assert _synthetic_study([twin_a, twin_b]).best("completion") is twin_a

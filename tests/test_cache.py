@@ -1,0 +1,209 @@
+"""Content-addressed result cache + checkpoint/resume (netsim/cache.py,
+DESIGN.md Sec. 7): cache-hit lanes must be bit-equal to fresh-run lanes
+(full state digest), the code digest must invalidate on any simulator
+source edit, and a killed chunked Study must resume to a result
+bit-equal to an uninterrupted run."""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.netsim import api, cache
+
+POINTS = ({}, {"start_cwnd_mult": 0.5})
+SEEDS = (0, 1)
+
+
+def _study():
+    return api.study("tiny_incast3", points=POINTS, seeds=SEEDS)
+
+
+def _digest(states):
+    return cache.state_digest(jax.device_get(states))
+
+
+# --------------------------------------------------------------------------
+# hit/miss accounting + bit-equality
+# --------------------------------------------------------------------------
+
+
+def test_cache_hits_are_bit_equal_to_fresh(tmp_path):
+    st = _study()
+    plain = st.run()                       # uncached reference
+    rc = cache.ResultCache(tmp_path / "c")
+
+    cold = st.run(cache=rc)
+    assert (cold.cache_hits, cold.cache_misses) == (0, st.n_lanes)
+    assert len(rc) == st.n_lanes
+
+    warm = st.run(cache=rc)
+    assert (warm.cache_hits, warm.cache_misses) == (st.n_lanes, 0)
+
+    # full-state bitwise equality across all three paths, and identical
+    # typed rows
+    assert _digest(plain.states) == _digest(cold.states) == \
+        _digest(warm.states)
+    assert [r.row() for r in plain.results] == \
+        [r.row() for r in warm.results]
+    # the recorded per-lane digests match what the lanes actually hold
+    for lane, key in enumerate(st.lane_keys()):
+        lane_st = jax.tree.map(lambda x: np.asarray(x)[lane],
+                               jax.device_get(plain.states))
+        meta = json.loads((rc.root / f"{key}.json").read_text())
+        assert meta["state_digest"] == cache.state_digest(lane_st)
+
+
+def test_new_points_recompute_only_new_lanes(tmp_path):
+    """The headline economy: extending a sweep with one new point costs
+    exactly S fresh lanes; the old points come from the cache."""
+    rc = cache.ResultCache(tmp_path / "c")
+    api.study("tiny_incast3", points=POINTS, seeds=SEEDS).run(cache=rc)
+    grown = api.study("tiny_incast3",
+                      points=POINTS + ({"start_cwnd_mult": 0.75},),
+                      seeds=SEEDS)
+    res = grown.run(cache=rc)
+    assert res.cache_hits == len(POINTS) * len(SEEDS)
+    assert res.cache_misses == len(SEEDS)
+    # and the stitched grid equals a fresh full run, bitwise
+    assert _digest(res.states) == _digest(grown.run().states)
+
+
+def test_seed_point_and_budget_are_all_keyed(tmp_path):
+    rc = cache.ResultCache(tmp_path / "c")
+    api.study("tiny_incast3", seeds=(0,)).run(cache=rc)
+    # different seed, different point, different tick budget: all miss
+    assert api.study("tiny_incast3", seeds=(1,)).run(cache=rc) \
+        .cache_hits == 0
+    assert api.study("tiny_incast3", points=[{"rto_mult": 5.0}],
+                     seeds=(0,)).run(cache=rc).cache_hits == 0
+    assert api.study("tiny_incast3", seeds=(0,)).run(
+        max_ticks=12_345, cache=rc).cache_hits == 0
+    # same everything: hit
+    assert api.study("tiny_incast3", seeds=(0,)).run(cache=rc) \
+        .cache_hits == 1
+
+
+# --------------------------------------------------------------------------
+# code digest
+# --------------------------------------------------------------------------
+
+
+def test_code_digest_invalidates_on_source_edit(tmp_path):
+    """Editing any .py under the simulator tree changes the digest (and
+    therefore orphans every lane key); unrelated bytes do not."""
+    a, b = tmp_path / "a", tmp_path / "b"
+    for root in (a, b):
+        (root / "pkg").mkdir(parents=True)
+        (root / "pkg" / "mod.py").write_text("X = 1\n")
+        (root / "pkg" / "notes.txt").write_text("not code\n")
+    assert cache.code_digest([a]) == cache.code_digest([b])
+
+    key_before = cache.lane_key("scen", (), 0, cache.code_digest([b]))
+    (b / "pkg" / "mod.py").write_text("X = 2\n")
+    dig_b = cache.code_digest([b])
+    assert dig_b != cache.code_digest([a])
+    assert cache.lane_key("scen", (), 0, dig_b) != key_before
+
+    # non-source bytes are not part of the digest: editing a .txt leaves
+    # tree ``a`` equal to a fresh twin with the original text file
+    (a / "pkg" / "notes.txt").write_text("still not code\n")
+    c = tmp_path / "c"
+    (c / "pkg").mkdir(parents=True)
+    (c / "pkg" / "mod.py").write_text("X = 1\n")
+    (c / "pkg" / "notes.txt").write_text("different non-code bytes\n")
+    assert cache.code_digest([a]) == cache.code_digest([c])
+
+
+def test_default_code_digest_covers_simulator_tree():
+    """The default digest is stable within a process and hex-shaped."""
+    d1, d2 = cache.code_digest(), cache.code_digest()
+    assert d1 == d2 and len(d1) == 64 and int(d1, 16) >= 0
+
+
+def test_scenario_digest_sensitivity():
+    sc = api._resolve("tiny_incast3")
+    d0 = cache.scenario_digest(sc, 1000)
+    assert d0 == cache.scenario_digest(sc, 1000)
+    assert d0 != cache.scenario_digest(sc, 2000)
+    assert d0 != cache.scenario_digest(sc.with_(algo="swift"), 1000)
+    wl2 = dataclasses.replace(sc.wl, size=sc.wl.size + 1)
+    assert d0 != cache.scenario_digest(sc.with_(wl=wl2), 1000)
+
+
+# --------------------------------------------------------------------------
+# checkpoint / resume
+# --------------------------------------------------------------------------
+
+
+class _Killed(RuntimeError):
+    pass
+
+
+def test_kill_then_resume_is_bit_equal(tmp_path, monkeypatch):
+    """Kill a chunked Study after the first chunk flushed; re-running
+    against the same cache resumes from the finished lanes and the final
+    grid is bit-equal to an uninterrupted, uncached run."""
+    st = _study()
+    plain = st.run()
+    rc = cache.ResultCache(tmp_path / "c")
+
+    real_put = cache.ResultCache.put
+    calls = {"n": 0}
+
+    def dying_put(self, *a, **kw):
+        if calls["n"] >= 2:            # let chunk 0 (2 lanes) land
+            raise _Killed("simulated kill mid-grid")
+        calls["n"] += 1
+        return real_put(self, *a, **kw)
+
+    monkeypatch.setattr(cache.ResultCache, "put", dying_put)
+    with pytest.raises(_Killed):
+        st.run(cache=rc, chunk_lanes=2)
+    monkeypatch.setattr(cache.ResultCache, "put", real_put)
+
+    assert len(rc) == 2                # exactly the flushed chunk
+    resumed = st.run(cache=rc, chunk_lanes=2)
+    assert resumed.cache_hits == 2
+    assert resumed.cache_misses == st.n_lanes - 2
+    assert _digest(resumed.states) == _digest(plain.states)
+    assert [r.row() for r in resumed.results] == \
+        [r.row() for r in plain.results]
+
+
+def test_chunked_uncached_run_matches(tmp_path):
+    """``chunk_lanes`` alone (no cache) just bounds the batch size —
+    still bit-equal to the one-shot run, including a chunk size that
+    does not divide the lane count."""
+    st = _study()
+    plain = st.run()
+    chunked = st.run(chunk_lanes=3)
+    assert _digest(plain.states) == _digest(chunked.states)
+
+
+def test_corrupt_entry_is_a_miss_not_an_error(tmp_path):
+    st = _study()
+    rc = cache.ResultCache(tmp_path / "c")
+    st.run(cache=rc)
+    # truncate one npz: that lane must silently recompute
+    victim = st.lane_keys()[0]
+    (rc.root / f"{victim}.npz").write_bytes(b"not an npz")
+    res = st.run(cache=rc)
+    assert res.cache_hits == st.n_lanes - 1
+    assert res.cache_misses == 1
+    assert _digest(res.states) == _digest(st.run().states)
+
+
+def test_prune_drops_stale_code_entries(tmp_path):
+    st = _study()
+    rc = cache.ResultCache(tmp_path / "c")
+    st.run(cache=rc)
+    n = len(rc)
+    assert rc.prune() == 0             # all entries current
+    # forge a stale entry
+    (rc.root / "deadbeef.json").write_text('{"code_digest": "old"}')
+    (rc.root / "deadbeef.npz").write_bytes(b"")
+    assert rc.prune() == 1
+    assert len(rc) == n
