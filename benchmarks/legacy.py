@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import registry, reps
 from repro.core.types import CCEvent
-from repro.netsim import engine, fabric, metrics, sender
+from repro.netsim import engine, fabric, faults, metrics, sender
 from repro.netsim.metrics import HIST_BINS
 from repro.netsim.state import pkt_size
 
@@ -44,9 +44,15 @@ def _departures(dims, consts, st):
     m = st.m
     NQ, CAP, L = dims.NQ, dims.CAP, dims.L
     qidx = consts.qidx
-    in_fault = t >= consts.fault_start
-    svc = jnp.where(in_fault & (consts.service_period > 1),
-                    (t % jnp.maximum(consts.service_period, 1)) == 0, True)
+    # the fault model moved to compiled schedule tables (netsim/faults);
+    # the shared evaluation replaces the seed's static service_period /
+    # dead vectors bit-for-bit, and the baseline keeps its seed-style op
+    # structure everywhere else
+    if dims.FK or dims.flapped:
+        per = faults.port_period(dims, consts, t)
+        svc = jnp.where(per > 1, (t % jnp.maximum(per, 1)) == 0, True)
+    else:
+        svc = True
     active = (st.q_size[:NQ] > 0) & svc
     head = st.q_head[:NQ]
     hf = st.q_fields[qidx, head]
@@ -57,7 +63,10 @@ def _departures(dims, consts, st):
     mark = hashing.uniform01(t * jnp.int32(131071) + qidx,
                              jnp.int32(0xECD) + st.salt) < pmark
     d_ecn = d_ecn | (mark & active).astype(I32)
-    black = consts.dead[qidx] & active & in_fault
+    if dims.FK or dims.flapped:
+        black = (per == 0)[qidx] & active
+    else:
+        black = jnp.zeros((NQ,), bool)
     emit = active & ~black
     next_q = fabric.route_from_queue(dims, consts, d_flow, d_ent)
     q_head = st.q_head.at[:NQ].set(jnp.where(active, (head + 1) % CAP, head))

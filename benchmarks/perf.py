@@ -90,7 +90,8 @@ def tier3_scenarios(quick: bool):
     CPU) run only on the tiny 3-tier fabric, same policy as the dense
     list."""
     if quick:
-        return [("tiny_3t", ("jnp", "pallas"))]
+        return [("tiny_3t", ("jnp", "pallas")),
+                ("perm_512n_3t_degraded", ("jnp",))]
     return [("perm_512n_3t", ("jnp",)),
             ("perm_1024n_3t", ("jnp",)),
             ("incast_256x1_3t", ("jnp",)),

@@ -100,6 +100,23 @@ def on_send(lb_mode: int, p: LBParams, s: LBState, flow_mask, seq_pkt, flow_ids,
     raise ValueError(f"unknown lb mode {lb_mode}")
 
 
+def on_timeout(lb_mode: int, p: LBParams, s: LBState, timed_out):
+    """Timeout-side update (failure recovery, ISSUE 8): REPS evicts the
+    cached entropy of a flow that just fired an RTO and replaces it with
+    a fresh one, so the retransmission explores a different equal-cost
+    path instead of re-firing forever into a dead link.  Gated behind
+    ``SimConfig.evict_on_timeout`` (Dims.evict) — a no-op for the other
+    balancers, whose path choice is not cached per flow."""
+    if lb_mode == LB_REPS:
+        n = p.num_entropies
+        cached = jnp.where(timed_out, s.next_entropy % n, s.cached_entropy)
+        return s._replace(
+            cached_entropy=cached,
+            next_entropy=s.next_entropy + timed_out.astype(jnp.int32),
+        )
+    return s
+
+
 def on_ack(lb_mode: int, p: LBParams, s: LBState, has_ack, ecn, ack_entropy, flow_ids, now):
     """ACK-side load-balancer update."""
     now = jnp.asarray(now, jnp.float32)

@@ -59,7 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.netsim import cache as cache_mod
-from repro.netsim import engine, scenarios, shard, state
+from repro.netsim import engine, faults as faults_mod, scenarios, shard, state
 from repro.netsim.metrics import jain_fairness
 from repro.netsim.scenarios import Scenario
 
@@ -79,12 +79,17 @@ CC_PARAM_KEYS = frozenset({
 CFG_KEYS = frozenset({
     "rto_mult", "react_every", "credit_window_mult", "start_cwnd_mult",
     "kmin_frac", "kmax_frac", "num_entropies", "fault_start",
+    "goodput_bin",
 })
 # SimConfig fields that change Dims / the compiled step — never sweepable;
-# vary the Scenario instead (one build per value)
+# vary the Scenario instead (one build per value).  The recovery knobs
+# (rto_backoff_max / evict_on_timeout) are here because crossing their
+# off/on boundary changes the traced graph — sweeping them would silently
+# keep the base config's branch.
 STATIC_KEYS = frozenset({
     "link", "tree", "algo", "cc_backend", "lb", "superstep", "leap",
-    "trimming", "faults", "cc_overrides",
+    "trimming", "faults", "cc_overrides", "rto_backoff_max",
+    "evict_on_timeout",
 })
 
 
@@ -216,6 +221,13 @@ class RunResult:
     rtt_hist: np.ndarray
     q_mean: float
     q_max: int
+    # recovery metrics (zero/empty when the config has no fault schedule)
+    delivered_bytes_fault: float = 0.0
+    goodput_hist: np.ndarray | None = None  # f32 [GOODPUT_BINS] binned bytes
+    goodput_bin: int = 0      # histogram bin width (ticks)
+    fault_ticks: int = 0      # ticks in [0, ticks) with any port unhealthy
+    repair_ticks: tuple = ()  # schedule transitions back to all-healthy
+    first_fault: int = -1     # first fault-active tick (-1 = never)
     wall_s: float | None = None
     state: state.SimState | None = dataclasses.field(default=None)
 
@@ -231,6 +243,24 @@ class RunResult:
             flow_meta = _flow_meta(sim)
         m = st.m
         now = int(st.now)
+        # fault-schedule host meta: the activity function is static (the
+        # schedule times a possibly point-swept fault_start), so
+        # fault_ticks / repair anchors integrate host-side exactly —
+        # no device counter or leap-accounting term needed
+        pt = dict(_norm_point(point))
+        eff_fs = int(pt.get("fault_start", sim.cfg.fault_start))
+        eff_gb = (int(pt.get("goodput_bin", sim.cfg.goodput_bin))
+                  or 8 * sim.dims.brtt_inter)
+        sched = faults_mod.lower(sim.cfg.faults)
+        if sched:
+            cf = faults_mod.compile_tables(sched, sim.topo, eff_fs)
+            fault_meta = dict(
+                fault_ticks=faults_mod.fault_ticks(cf, eff_fs, now),
+                repair_ticks=tuple(faults_mod.repair_times(cf, eff_fs, now)),
+                first_fault=faults_mod.first_fault_time(cf, eff_fs, now),
+            )
+        else:
+            fault_meta = {}
         return cls(
             scenario=scenario, algo=sim.cfg.algo, lb=sim.cfg.lb,
             point=_norm_point(point), seed=int(seed), max_ticks=int(max_ticks),
@@ -245,7 +275,11 @@ class RunResult:
             delivered_bytes=float(m.delivered_bytes),
             rtt_hist=np.asarray(m.rtt_hist),
             q_mean=float(m.q_sum) / max(1, now) / sim.dims.NQ,
-            q_max=int(m.q_max), wall_s=wall_s, state=st)
+            q_max=int(m.q_max),
+            delivered_bytes_fault=float(m.delivered_bytes_fault),
+            goodput_hist=np.asarray(m.goodput_hist),
+            goodput_bin=eff_gb, **fault_meta,
+            wall_s=wall_s, state=st)
 
     # -- flow-level views ---------------------------------------------------
 
@@ -314,6 +348,86 @@ class RunResult:
     def spurious_frac(self) -> float:
         return self.spurious_retx / max(1, self.delivered_pkts)
 
+    # -- recovery metrics (ISSUE 8) -----------------------------------------
+
+    @property
+    def delivered_fault_frac(self) -> float:
+        """Fraction of delivered bytes that landed while the fault
+        schedule was active (0.0 without faults)."""
+        return self.delivered_bytes_fault / max(self.delivered_bytes, 1.0)
+
+    def _goodput_rates(self):
+        """(rates, n_bins): per-bin delivered bytes/tick over the run."""
+        if self.goodput_hist is None or self.goodput_bin <= 0:
+            return np.zeros(0), 0
+        n = min(len(self.goodput_hist),
+                -(-max(self.ticks, 1) // self.goodput_bin))
+        return self.goodput_hist[:n] / float(self.goodput_bin), n
+
+    @property
+    def _baseline_rate(self) -> float:
+        """Healthy goodput reference: mean rate over the bins fully
+        before the first fault, falling back to the peak bin when the
+        fault is active from tick 0."""
+        rates, n = self._goodput_rates()
+        if not n:
+            return 0.0
+        pre = self.first_fault // self.goodput_bin if self.first_fault > 0 \
+            else 0
+        if pre > 0:
+            return float(rates[:pre].mean())
+        return float(rates.max())
+
+    @property
+    def time_to_recover(self) -> tuple:
+        """Per repair event: ticks from the repair until binned goodput
+        first returns to >= 90% of the healthy baseline (-1 = never
+        inside the run)."""
+        rates, n = self._goodput_rates()
+        base = self._baseline_rate
+        out = []
+        for r in self.repair_ticks:
+            ttr = -1
+            if n and base > 0:
+                b0 = min(r // self.goodput_bin, n - 1)
+                for b in range(b0, n):
+                    if rates[b] >= 0.9 * base:
+                        ttr = max((b + 1) * self.goodput_bin - r, 0)
+                        break
+            out.append(int(ttr))
+        return tuple(out)
+
+    @property
+    def ttr_max(self) -> int:
+        """Worst per-fault-event time-to-recover (-1: no repair events,
+        or goodput never returned to baseline inside the run)."""
+        ttrs = self.time_to_recover
+        if not ttrs or any(t < 0 for t in ttrs):
+            return -1
+        return max(ttrs)
+
+    @property
+    def dip_depth(self) -> float:
+        """Goodput dip depth while the schedule is active: 1 - (minimum
+        binned rate inside the fault window) / baseline, in [0, 1]."""
+        rates, n = self._goodput_rates()
+        base = self._baseline_rate
+        if not n or base <= 0 or self.first_fault < 0:
+            return 0.0
+        b0 = min(self.first_fault // self.goodput_bin, n - 1)
+        return float(np.clip(1.0 - rates[b0:].min() / base, 0.0, 1.0))
+
+    @property
+    def dip_ticks(self) -> int:
+        """Ticks (bin-quantized) from the first fault with binned goodput
+        below 90% of the healthy baseline — the dip duration."""
+        rates, n = self._goodput_rates()
+        base = self._baseline_rate
+        if not n or base <= 0 or self.first_fault < 0:
+            return 0
+        b0 = min(self.first_fault // self.goodput_bin, n - 1)
+        return int((rates[b0:] < 0.9 * base).sum()) * self.goodput_bin
+
     # -- export -------------------------------------------------------------
 
     @property
@@ -344,6 +458,16 @@ class RunResult:
             delivered_bytes=self.delivered_bytes,
             q_mean=round(self.q_mean, 6), q_max=self.q_max,
         )
+        if self.first_fault >= 0:
+            # recovery metrics, only for runs with an active fault
+            # schedule (keeps fault-free ledger rows unchanged)
+            d.update(
+                fault_ticks=self.fault_ticks,
+                delivered_fault_frac=round(self.delivered_fault_frac, 6),
+                ttr_max=self.ttr_max,
+                dip_depth=round(self.dip_depth, 4),
+                dip_ticks=self.dip_ticks,
+            )
         if self.wall_s is not None:
             d["wall_s"] = round(self.wall_s, 6)
         return d

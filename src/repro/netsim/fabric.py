@@ -21,7 +21,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.netsim import hashing
+from repro.netsim import faults, hashing
+from repro.netsim.metrics import GOODPUT_BINS
 from repro.netsim.state import HORIZON_INF, Consts, Dims, SimState, pkt_size
 
 I32 = jnp.int32
@@ -110,9 +111,17 @@ def departures(dims: Dims, consts: Consts, st: SimState) -> SimState:
     B = dims.QE                                       # core/edge port split
 
     qidx = consts.qidx
-    in_fault = t >= consts.fault_start
-    svc = jnp.where(in_fault & (consts.service_period > 1),
-                    (t % jnp.maximum(consts.service_period, 1)) == 0, True)
+    # fault schedule: per-port service period as a function of t (1 =
+    # healthy, 0 = dead, k > 1 = degraded; faults.port_period evaluates
+    # the compiled transition tables — gated statically so no-fault
+    # configs keep the historical fault-free graph).  The modulus stays
+    # on the absolute tick, so a lowered legacy fault is bit-identical
+    # to the historical service_period evaluation.
+    if dims.FK or dims.flapped:
+        per = faults.port_period(dims, consts, t)
+        svc = jnp.where(per > 1, (t % jnp.maximum(per, 1)) == 0, True)
+    else:
+        svc = True
     active = (st.q_size[:NQ] > 0) & svc
     head = st.q_head[:NQ]
     hf = st.q_fields[qidx, head]                      # [NQ, 5]
@@ -123,9 +132,10 @@ def departures(dims: Dims, consts: Consts, st: SimState) -> SimState:
     mark = hashing.uniform01(t * jnp.int32(131071) + qidx,
                              jnp.int32(0xECD) + st.salt) < pmark
     d_ecn = d_ecn | (mark & active).astype(I32)
-    # dead is already [NQ] in port order — no need to gather it by the
-    # (traced, so not constant-foldable) qidx iota
-    black = consts.dead & active & in_fault
+    if dims.FK or dims.flapped:
+        black = (per == 0) & active
+    else:
+        black = jnp.zeros((NQ,), bool)
     emit = active & ~black
     next_q = route_from_queue(dims, consts, d_flow, d_ent)
     q_head = st.q_head.at[:NQ].set(jnp.where(active, (head + 1) % CAP, head))
@@ -209,9 +219,25 @@ def arrivals(dims: Dims, consts: Consts, st: SimState,
     ack_payload = jnp.where(deliver[:, None], jnp.stack(
         [deliver.astype(I32), d_flow, d_seq, d_ecn, d_ent, d_ts], axis=1), 0)
     ack_ring = st.ack_ring.at[(t + consts.ret) % R].set(ack_payload)
+    # recovery metrics (ISSUE 8): binned goodput history for dip/TTR
+    # analysis, plus bytes delivered while the fault schedule is active.
+    # Both only accrue on delivery ticks (zero on event-free ticks), so
+    # they are leap-exact for free; both live behind the same static
+    # fault gate so fault-free configs keep the historical graph.
+    dbytes = jnp.sum(psz_f).astype(F32)
+    goodput_hist = m.goodput_hist
+    delivered_bytes_fault = m.delivered_bytes_fault
+    if dims.FK or dims.flapped:
+        gbin = jnp.minimum(t // consts.goodput_bin, GOODPUT_BINS - 1)
+        goodput_hist = m.goodput_hist + jnp.where(
+            jnp.arange(GOODPUT_BINS, dtype=I32) == gbin, dbytes, 0.0)
+        delivered_bytes_fault = m.delivered_bytes_fault + jnp.where(
+            faults.fault_active(dims, consts, t), dbytes, 0.0)
     m = m._replace(
         delivered_pkts=m.delivered_pkts + jnp.sum(deliver.astype(I32)),
-        delivered_bytes=m.delivered_bytes + jnp.sum(psz_f).astype(F32),
+        delivered_bytes=m.delivered_bytes + dbytes,
+        goodput_hist=goodput_hist,
+        delivered_bytes_fault=delivered_bytes_fault,
     )
 
     # ---- enqueues (sort-free scatter with capacity + trim) ----
@@ -318,4 +344,10 @@ def horizon(dims: Dims, consts: Consts, st: SimState):
     live = jnp.any(st.infl[:, :, 0] == 1, axis=1)                  # [L]
     dist = (consts.iota_l - t) % dims.L
     h_wire = jnp.min(jnp.where(live, dist, HORIZON_INF))
-    return jnp.where(busy, 0, h_wire)
+    h = jnp.where(busy, 0, h_wire)
+    if dims.FK or dims.flapped:
+        # clamp every leap to the next fault-schedule transition: over
+        # [t, t + h) every port's service period is then constant, so a
+        # leap can never jump across a fail/degrade/repair/flap edge
+        h = jnp.minimum(h, faults.transition_horizon(dims, consts, t))
+    return h

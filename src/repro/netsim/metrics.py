@@ -15,7 +15,9 @@ import numpy as np
 I32 = jnp.int32
 F32 = jnp.float32
 
-HIST_BINS = 64  # RTT histogram bins, width = brtt/8
+HIST_BINS = 64     # RTT histogram bins, width = brtt/8
+GOODPUT_BINS = 64  # delivered-bytes history bins (Consts.goodput_bin
+                   # ticks wide; drives the recovery dip/TTR metrics)
 
 
 class Metrics(NamedTuple):
@@ -31,6 +33,11 @@ class Metrics(NamedTuple):
     q_sum: jnp.ndarray           # sum over (ticks, ports) of occupancy
     q_max: jnp.ndarray
     spurious_retx: jnp.ndarray   # retransmitted packets that had been delivered
+    # recovery metrics (only accrued when a fault schedule is present;
+    # updated exclusively on delivery ticks, so leap-exact with no
+    # leap_account term)
+    delivered_bytes_fault: jnp.ndarray  # bytes delivered while fault-active
+    goodput_hist: jnp.ndarray           # f32 [GOODPUT_BINS] binned bytes
 
 
 def init_metrics() -> Metrics:
@@ -49,6 +56,8 @@ def init_metrics() -> Metrics:
         q_sum=f(),
         q_max=i(),
         spurious_retx=i(),
+        delivered_bytes_fault=f(),
+        goodput_hist=jnp.zeros((GOODPUT_BINS,), F32),
     )
 
 
@@ -103,6 +112,8 @@ def summarize(sim, st) -> dict:
         trims=int(m.n_trim), drops=int(m.n_drop), blackholed=int(m.n_black),
         timeouts=int(m.n_to), retx=int(m.n_retx), acks=int(m.n_ack),
         delivered_bytes=float(m.delivered_bytes),
+        delivered_bytes_fault=float(m.delivered_bytes_fault),
+        goodput_hist=np.asarray(m.goodput_hist),
         spurious_retx=int(m.spurious_retx),
         rtt_hist=np.asarray(m.rtt_hist),
         q_mean=float(m.q_sum) / max(1, int(st.now)) / sim.dims.NQ,

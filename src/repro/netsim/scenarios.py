@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-from repro.netsim import workloads
+from repro.netsim import faults, workloads
 from repro.netsim.state import SimConfig
 from repro.netsim.units import FatTreeConfig, LinkConfig
 from repro.netsim.workloads import Workload
@@ -215,6 +215,39 @@ register("perm_128n_3t", lambda: _std(
     "perm_128n_3t", TREE_128_3T,
     workloads.permutation(TREE_128_3T, size_bytes=256 * KiB, seed=7),
     120_000))
+
+# failover scenarios (ISSUE 8): dynamic FaultSchedule timelines on the
+# 128-node three-tier tree, benched with and without the failure-recovery
+# transport knobs (benchmarks/failover.py).  1 MiB flows so the kill lands
+# mid-flight, *after* the REPS explore phase — the stranding mode the
+# recovery knobs exist for is a flow retransmitting past-explore packets
+# onto a dead cached entropy forever.
+register("corefail_128n_3t", lambda: _std(
+    "corefail_128n_3t", TREE_128_3T,
+    workloads.permutation(TREE_128_3T, size_bytes=1 * MiB, seed=7),
+    6_000).with_(faults=faults.FaultSchedule(events=(
+        # both core uplinks of T1 switch 0 die at t=500; the repair lands
+        # 10 ticks before the budget — less than one forward traversal —
+        # so a flow still stranded at the repair cannot sneak in.
+        faults.FaultEvent(t=500, kind="t1_up", i=0, j=0, period=0),
+        faults.FaultEvent(t=500, kind="t1_up", i=0, j=1, period=0),
+        faults.FaultEvent(t=5_990, kind="t1_up", i=0, j=0, period=1),
+        faults.FaultEvent(t=5_990, kind="t1_up", i=0, j=1, period=1)))))
+register("flap_128n_3t", lambda: _std(
+    "flap_128n_3t", TREE_128_3T,
+    workloads.permutation(TREE_128_3T, size_bytes=1 * MiB, seed=7),
+    8_000).with_(faults=faults.FaultSchedule(flaps=(
+        # rack 0's uplink 0 flaps 300 down / 300 up for five cycles
+        faults.Flap(kind="t0_up", i=0, j=0, up=300, cycle=600,
+                    t=200, t_end=3_200, period=0),))))
+register("switchkill_128n_3t", lambda: _std(
+    "switchkill_128n_3t", TREE_128_3T,
+    workloads.permutation(TREE_128_3T, size_bytes=1 * MiB, seed=7),
+    8_000).with_(faults=faults.FaultSchedule(events=(
+        # T1 switch 1 (switch id racks + 1) dies whole at t=500 — every
+        # port it owns blackholes — and comes back at t=3000.
+        faults.FaultEvent(t=500, kind="switch", i=17, period=0),
+        faults.FaultEvent(t=3_000, kind="switch", i=17, period=1)))))
 
 # sparse/large-message scenarios (event-horizon leap targets, DESIGN 6.3)
 register("sparse_heavy_32n", lambda: _std(

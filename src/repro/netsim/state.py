@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core import registry, reps
 from repro.core.types import CCParams, CCState, init_cc_state, make_cc_params
+from repro.netsim import faults as faults_schedule
 from repro.netsim.metrics import Metrics, init_metrics
 from repro.netsim.topology import build_topology
 from repro.netsim.units import (FatTreeConfig, LinkConfig, Timing,
@@ -72,10 +73,22 @@ class SimConfig:
     start_cwnd_mult: float = 1.25    # initial window as fraction of BDP
     kmin_frac: float = 0.2           # RED thresholds as fraction of port buffer
     kmax_frac: float = 0.8
-    # fault injection (Fig. 7): ((rack, uplink, period), ...) — period 2 =
-    # half-rate link, period 0 = dead link (blackholes traffic)
+    # fault injection (Fig. 7): a faults.FaultSchedule (timeline of
+    # fail/degrade/repair events plus periodic flapping), or the legacy
+    # static tuples ((rack, uplink, period), ...) / ((kind, i, j, period),
+    # ...) which lower to one-event schedules — period 2 = half-rate link,
+    # period 0 = dead link (blackholes traffic).  Schedule times are
+    # relative to fault_start, which stays a sweepable scalar.
     faults: tuple = ()
     fault_start: int = 0
+    rto_backoff_max: int = 0         # capped exponential RTO backoff:
+                                     # RTO * 2^min(consecutive timeouts,
+                                     # cap); 0 = off (legacy fixed RTO)
+    evict_on_timeout: bool = False   # REPS: evict the cached entropy on
+                                     # timeout so retransmits explore
+                                     # fresh paths around a failure
+    goodput_bin: int = 0             # recovery-metric goodput histogram
+                                     # bin width (ticks); 0 = auto (8 brtt)
     cc_overrides: tuple = ()         # (("fd", 0.5), ...) applied to CCParams
 
 
@@ -116,6 +129,10 @@ class Dims(NamedTuple):
     credit_based: bool
     paced: bool
     lb_mode: int
+    FK: int         # fault transition-table columns (0 = no timeline)
+    flapped: bool   # any flapping fault window in the schedule
+    rto_backoff_max: int  # RTO backoff exponent cap (0 = backoff off)
+    evict: bool     # REPS entropy eviction on timeout
 
 
 # --------------------------------------------------------------------------
@@ -140,9 +157,17 @@ class Consts(NamedTuple):
     slot_of: jnp.ndarray         # i32 [NF] flow's column in flows_of[src]
     flows_by_recv: jnp.ndarray   # i32 [N, FRMAX]
     lat_q: jnp.ndarray           # i32 [NE] post-departure wire latency
-    service_period: jnp.ndarray  # i32 [NQ] degraded-link service period
-    dead: jnp.ndarray            # bool [NQ]
+    # -- compiled fault schedule (faults.compile_tables; times relative to
+    #    fault_start so the legacy knob stays a sweepable scalar) --
+    ft_time: jnp.ndarray         # i32 [NQ, max(FK, 1)] transition times
+    ft_period: jnp.ndarray       # i32 [NQ, max(FK, 1)] service periods
+    fl_start: jnp.ndarray        # i32 [NQ] flap window start
+    fl_end: jnp.ndarray          # i32 [NQ] flap window end (INF = open)
+    fl_cycle: jnp.ndarray        # i32 [NQ] flap cycle length (0 = none)
+    fl_up: jnp.ndarray           # i32 [NQ] healthy ticks per cycle
+    fl_period: jnp.ndarray       # i32 [NQ] period while flapped down
     fault_start: jnp.ndarray     # i32 scalar
+    goodput_bin: jnp.ndarray     # i32 scalar goodput histogram bin width
     trim_delay: jnp.ndarray      # i32 scalar
     kmin: jnp.ndarray            # f32 scalar RED lower threshold (packets)
     kspan: jnp.ndarray           # f32 scalar RED kmax - kmin
@@ -250,6 +275,9 @@ class SimState(NamedTuple):
     rr_recv: jnp.ndarray             # i32 [N]
     rr_send: jnp.ndarray             # i32 [N]
     pace_accum: jnp.ndarray          # f32 [NF]
+    rto_backoff: jnp.ndarray         # i32 [NF] consecutive-timeout count
+                                     #   (drives capped exponential RTO
+                                     #   backoff; 0 unless Dims enables it)
     cc: CCState
     lb: reps.LBState
     m: Metrics
@@ -356,36 +384,19 @@ def derive(cfg: SimConfig, wl: Workload):
                 f"(switch-facing/edge/sender) and satisfy 0 < lat < L={L}; "
                 f"got {sorted(set(lat_q.tolist()))}")
 
-    # ---- fault maps ----
-    # A fault names one port: the historical 3-tuple (rack, uplink, period)
-    # hits a t0_up port; a 4-tuple ("t0_up"|"t1_up"|"t2_down"|"t1_down",
-    # i, j, period) addresses any tier (core-link faults included).
-    # period 0 = dead (blackholes traffic), period p > 1 = serviced every
-    # p-th tick (degraded link).
-    fault_port = {"t0_up": topo.t0_up, "t1_up": topo.t1_up,
-                  "t2_down": topo.t2_down, "t1_down": topo.t1_down}
-    service_period = np.ones(NQ, np.int32)
-    dead = np.zeros(NQ, bool)
-    for f in cfg.faults:
-        if len(f) == 3:
-            kind_name, i, j, period = "t0_up", *f
-        elif len(f) == 4:
-            kind_name, i, j, period = f
-        else:
-            raise ValueError(
-                f"fault {f!r}: want (rack, uplink, period) or "
-                f"(kind, i, j, period)")
-        if kind_name not in fault_port:
-            raise ValueError(
-                f"fault {f!r}: unknown port kind {kind_name!r}; one of "
-                f"{sorted(fault_port)}")
-        q = fault_port[kind_name](i, j)
-        if not 0 <= q < QE:
-            raise ValueError(f"fault {f!r}: port {q} outside the fabric")
-        if period == 0:
-            dead[q] = True
-        else:
-            service_period[q] = period
+    # ---- fault schedule compilation (faults.py) ----
+    # Legacy static tuples lower to one-event schedules; a FaultSchedule
+    # passes through.  compile_tables validates every entry (kind, ranges,
+    # signs) with actionable errors naming the offending tuple, and emits
+    # the per-port transition tables the fabric evaluates each tick.
+    sched = faults_schedule.lower(cfg.faults)
+    cf = faults_schedule.compile_tables(sched, topo, cfg.fault_start)
+    if cfg.rto_backoff_max < 0:
+        raise ValueError(
+            f"rto_backoff_max must be >= 0, got {cfg.rto_backoff_max}")
+    if cfg.goodput_bin < 0:
+        raise ValueError(f"goodput_bin must be >= 0, got {cfg.goodput_bin}")
+    goodput_bin = int(cfg.goodput_bin) or 8 * int(tm.brtt_inter)
     if not cfg.kmax_frac > cfg.kmin_frac:
         raise ValueError(
             f"RED thresholds need kmax_frac > kmin_frac, got "
@@ -429,6 +440,9 @@ def derive(cfg: SimConfig, wl: Workload):
         credit_based=cfg.algo in registry.CREDIT_BASED,
         paced=paced,
         lb_mode=reps.LB_NAMES[cfg.lb],
+        FK=cf.FK, flapped=cf.flapped,
+        rto_backoff_max=int(cfg.rto_backoff_max),
+        evict=bool(cfg.evict_on_timeout),
     )
     consts = Consts(
         src=jnp.asarray(wl.src, I32),
@@ -440,9 +454,15 @@ def derive(cfg: SimConfig, wl: Workload):
         slot_of=jnp.asarray(slot_of),
         flows_by_recv=jnp.asarray(flows_by_recv),
         lat_q=jnp.asarray(lat_q),
-        service_period=jnp.asarray(service_period),
-        dead=jnp.asarray(dead),
+        ft_time=jnp.asarray(cf.ft_time),
+        ft_period=jnp.asarray(cf.ft_period),
+        fl_start=jnp.asarray(cf.fl_start),
+        fl_end=jnp.asarray(cf.fl_end),
+        fl_cycle=jnp.asarray(cf.fl_cycle),
+        fl_up=jnp.asarray(cf.fl_up),
+        fl_period=jnp.asarray(cf.fl_period),
         fault_start=jnp.asarray(cfg.fault_start, I32),
+        goodput_bin=jnp.asarray(goodput_bin, I32),
         trim_delay=jnp.asarray(tm.trim_delay, I32),
         kmin=jnp.asarray(kmin, F32),
         kspan=jnp.asarray(kmax - kmin, F32),
@@ -528,5 +548,6 @@ def init_state(dims: Dims, consts: Consts) -> SimState:
         rr_recv=zeros((N,), I32),
         rr_send=zeros((N,), I32),
         pace_accum=zeros((NF,), F32),
+        rto_backoff=zeros((NF,), I32),
         cc=cc, lb=lb, m=init_metrics(),
     )

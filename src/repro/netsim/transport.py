@@ -24,6 +24,19 @@ I32 = jnp.int32
 F32 = jnp.float32
 
 
+def effective_rto(dims: Dims, consts: Consts, st: SimState):
+    """Per-flow RTO with capped exponential backoff (failure recovery,
+    ISSUE 8): ``rto * 2^min(consecutive timeouts, cap)``.  ``ldexp``
+    scales the f32 base by an exact power of two, and the gate is static,
+    so backoff-off configs keep the historical ``consts.rto`` verbatim.
+    Used by both the drain and the timeout horizon — the leap must land
+    exactly on the backed-off fire tick."""
+    if not dims.rto_backoff_max:
+        return consts.rto
+    return jnp.ldexp(consts.rto,
+                     jnp.minimum(st.rto_backoff, dims.rto_backoff_max))
+
+
 def control(dims: Dims, consts: Consts, cc_update, st: SimState,
             drain=None) -> SimState:
     """Phase 3: ACK / trim / timeout / credit events -> transport state,
@@ -85,12 +98,25 @@ def control(dims: Dims, consts: Consts, cc_update, st: SimState,
     # interchangeable backends)
     started_flows = (t >= consts.t_start) & ~st.done
     st_state, n_to, spur, un_pkts = drain(
-        t, consts.rto, started_flows, has_ack, ack_seq, lbits,
+        t, effective_rto(dims, consts, st), started_flows, has_ack,
+        ack_seq, lbits,
         st.bitmap[:NF], st.sent[0, :NF], st.sent[1, :NF], st.sent[2, :NF])
     sent = st.sent.at[0, :NF].set(st_state)
     m = m._replace(spurious_retx=m.spurious_retx + jnp.sum(spur))
     to_bytes = n_to.astype(F32) * MTU
     m = m._replace(n_to=m.n_to + jnp.sum(n_to))
+
+    # capped exponential RTO backoff: bump on a tick that fired timeouts,
+    # reset on any ACK (an ACK proves the path is moving again; on a tick
+    # with both, the reset wins).  Event-free ticks change nothing, so
+    # time leaping stays exact.
+    rto_backoff = st.rto_backoff
+    if dims.rto_backoff_max:
+        rto_backoff = jnp.where(
+            n_to > 0,
+            jnp.minimum(st.rto_backoff + 1, dims.rto_backoff_max),
+            st.rto_backoff)
+        rto_backoff = jnp.where(has_ack, 0, rto_backoff)
 
     unacked = un_pkts.astype(F32) * MTU
 
@@ -103,6 +129,8 @@ def control(dims: Dims, consts: Consts, cc_update, st: SimState,
     cc = cc_update(consts.cc, st.cc, ev, t)
     lb = reps.on_ack(dims.lb_mode, consts.lb, st.lb, has_ack, ack_ecn, ack_ent,
                      flow_ids, t)
+    if dims.evict:
+        lb = reps.on_timeout(dims.lb_mode, consts.lb, lb, n_to > 0)
     # RTT histogram — one-hot reduce instead of a scatter-add ([NF, BINS]
     # fused compare+sum beats the XLA:CPU scatter loop)
     bins = jnp.clip((rtt * (8.0 / dims.brtt_inter)).astype(I32), 0, HIST_BINS - 1)
@@ -118,6 +146,7 @@ def control(dims: Dims, consts: Consts, cc_update, st: SimState,
     return st._replace(
         ack_ring=ack_ring, trim_ring=trim_ring, credit_ring=credit_ring,
         sent=sent, unacked=unacked, cc=cc, lb=lb, m=m,
+        rto_backoff=rto_backoff,
     )
 
 
@@ -144,7 +173,8 @@ def horizon(dims: Dims, consts: Consts, st: SimState):
         h = jnp.minimum(h, jnp.min(jnp.where(live_cred, dist, HORIZON_INF)))
     started = (t >= consts.t_start) & ~st.done
     armed = (st.sent[0, :NF] == 1) & started[:, None]               # [NF, W]
-    fire = (st.sent[2, :NF] + jnp.floor(consts.rto).astype(I32)[:, None]
+    fire = (st.sent[2, :NF]
+            + jnp.floor(effective_rto(dims, consts, st)).astype(I32)[:, None]
             + 1 - t)
     h_to = jnp.min(jnp.where(armed, jnp.maximum(fire, 0), HORIZON_INF))
     return jnp.minimum(h, h_to)

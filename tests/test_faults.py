@@ -1,0 +1,312 @@
+"""Dynamic fault schedules and failure-recovery transport (ISSUE 8).
+
+Covers the FaultSchedule compilation contract end to end:
+
+* validation — every malformed schedule entry (out-of-range port
+  coordinates, negative times/periods, degenerate flap windows) raises an
+  actionable error naming the offending entry, mirroring
+  ``Workload.validate``;
+* lowering — legacy ``faults=((r, a, period), ...)`` tuples and their
+  explicit one-event ``FaultSchedule`` form produce bit-identical final
+  state pytrees (the acceptance digest);
+* recovery knobs — ``rto_backoff_max`` / ``evict_on_timeout`` are exact
+  no-ops on runs that never fire a timeout, and on the registered
+  fail-then-repair three-tier scenario the recovery configuration
+  completes every flow while the no-recovery configuration strands at
+  least one (the ISSUE 8 acceptance case);
+* recovery metrics — ``fault_ticks`` / ``delivered_fault_frac`` /
+  ``ttr_max`` / ``dip_depth`` flow through ``RunResult.row()`` exactly
+  when a schedule is present.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.netsim import api, faults, state, workloads
+from repro.netsim.engine import SimConfig, build
+from repro.netsim.faults import FaultEvent, FaultSchedule, Flap
+from repro.netsim.state import derive
+from repro.netsim.units import FatTreeConfig, LinkConfig
+
+LINK = LinkConfig()
+TREE2 = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=2)        # 4:1
+TREE3 = FatTreeConfig(racks=4, nodes_per_rack=2, uplinks=2,
+                      pods=2, core_uplinks=1)                      # core 2:1
+
+
+def _derive(tree, wl, **cfg_kw):
+    return derive(SimConfig(link=LINK, tree=tree, **cfg_kw), wl)
+
+
+def _final_state(tree, wl, max_ticks=30000, **cfg_kw):
+    sim = build(SimConfig(link=LINK, tree=tree, **cfg_kw), wl)
+    st = sim.run(max_ticks=max_ticks)
+    st.now.block_until_ready()
+    return st
+
+
+def _assert_pytree_equal(st_a, st_b):
+    la, lb = jax.tree.leaves(st_a), jax.tree.leaves(st_b)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# validation: actionable errors naming the offending entry
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tree,bad,msg", [
+    # out-of-range coordinates per kind, two- and three-tier
+    (TREE2, (("t0_up", 9, 0, 0),), r"faults\[0\].*i \(rack\)=9"),
+    (TREE2, (("t0_up", 0, 5, 0),), r"faults\[0\].*j \(uplink\)=5"),
+    (TREE3, (("t1_up", 99, 0, 0),), r"faults\[0\].*i \(t1 switch\)=99"),
+    (TREE3, (("t2_down", 0, 7, 2),), r"faults\[0\].*j \(pod\)=7"),
+    (TREE3, (("t1_down", 0, 3, 0),), r"faults\[0\].*j \(rack-in-pod\)=3"),
+    (TREE2, (("t1_up", 0, 0, 0),), r"faults\[0\].*three-tier"),
+    (TREE2, (("warp_core", 0, 0, 0),), r"faults\[0\].*unknown fault kind"),
+    (TREE2, ((0, 9, 0),), r"faults\[0\].*j \(uplink\)=9"),   # legacy 3-tuple
+], ids=["rack", "uplink", "t1", "pod", "t1down", "two-tier", "kind",
+        "legacy"])
+def test_validate_out_of_range_names_entry(tree, bad, msg):
+    wl = workloads.permutation(tree, size_bytes=4096, seed=0)
+    with pytest.raises(ValueError, match=msg):
+        _derive(tree, wl, faults=bad)
+
+
+@pytest.mark.parametrize("cfg_kw,msg", [
+    (dict(faults=((0, 0, 2),), fault_start=-5), r"fault_start=-5"),
+    (dict(faults=FaultSchedule(events=(
+        FaultEvent(t=-1, kind="t0_up", i=0),))), r"t must be >= 0"),
+    (dict(faults=FaultSchedule(events=(
+        FaultEvent(t=0, kind="t0_up", i=0, period=-2),))),
+     r"period must be >= 0"),
+    (dict(faults=FaultSchedule(flaps=(
+        Flap(kind="t0_up", i=0, up=3, cycle=2),))),
+     r"0 < up < cycle"),
+    (dict(faults=FaultSchedule(flaps=(
+        Flap(kind="t0_up", i=0, up=1, cycle=4, t=10, t_end=10),))),
+     r"0 <= t < t_end"),
+    (dict(faults=((0, 0),)), r"not understood"),
+    (dict(rto_backoff_max=-1), r"rto_backoff_max"),
+    (dict(goodput_bin=-8), r"goodput_bin"),
+], ids=["fault_start", "event_t", "event_period", "flap_up", "flap_win",
+        "tuple_shape", "backoff", "goodput_bin"])
+def test_validate_schedule_shape_errors(cfg_kw, msg):
+    wl = workloads.permutation(TREE2, size_bytes=4096, seed=0)
+    with pytest.raises(ValueError, match=msg):
+        _derive(TREE2, wl, **cfg_kw)
+
+
+def test_validate_duplicate_flap_per_port():
+    wl = workloads.permutation(TREE2, size_bytes=4096, seed=0)
+    flaps = (Flap(kind="t0_up", i=0, j=0, up=2, cycle=4),
+             Flap(kind="t0_up", i=0, j=0, up=3, cycle=6))
+    with pytest.raises(ValueError, match=r"at most one flap per port"):
+        _derive(TREE2, wl, faults=FaultSchedule(flaps=flaps))
+
+
+def test_switch_kind_expands_to_all_owned_ports():
+    """kind='switch' marks every queue the switch owns dead at once."""
+    wl = workloads.permutation(TREE3, size_bytes=4096, seed=0)
+    cfg = SimConfig(link=LINK, tree=TREE3)
+    topo, _, _, _ = derive(cfg, wl)
+    sw = int(TREE3.racks)          # first T1 switch id = racks + 0
+    sched = FaultSchedule(events=(
+        FaultEvent(t=0, kind="switch", i=sw, period=0),))
+    cf = faults.compile_tables(sched, topo, 0)
+    per = faults.np_port_period(cf, 0, 100)
+    dead = set(np.where(per == 0)[0])
+    owned = set(np.where(np.asarray(topo.sw_of_q) == sw)[0])
+    assert dead == owned and owned, (dead, owned)
+    with pytest.raises(ValueError, match=r"switch=999 out of range"):
+        faults.compile_tables(FaultSchedule(events=(
+            FaultEvent(t=0, kind="switch", i=999),)), topo, 0)
+
+
+# --------------------------------------------------------------------------
+# lowering: legacy tuples == explicit one-event schedules, bit for bit
+# --------------------------------------------------------------------------
+
+def test_legacy_tuple_lowers_to_one_event_schedule_bitwise():
+    """The acceptance digest: a legacy ``(r, a, period)`` tuple with a
+    nonzero ``fault_start`` and the explicit one-event FaultSchedule must
+    produce bit-identical *full final-state pytrees*."""
+    wl = workloads.permutation(TREE2, size_bytes=48 * 4096, seed=1)
+    legacy = _final_state(TREE2, wl, faults=((0, 1, 2),), fault_start=120)
+    sched = FaultSchedule(events=(
+        FaultEvent(t=0, kind="t0_up", i=0, j=1, period=2),))
+    explicit = _final_state(TREE2, wl, faults=sched, fault_start=120)
+    _assert_pytree_equal(legacy, explicit)
+
+
+def test_legacy_4tuple_lowers_bitwise_three_tier():
+    wl = workloads.permutation(TREE3, size_bytes=32 * 4096, seed=2)
+    legacy = _final_state(TREE3, wl,
+                          faults=(("t1_up", 0, 0, 0), ("t2_down", 0, 1, 2)),
+                          fault_start=50)
+    sched = FaultSchedule(events=(
+        FaultEvent(t=0, kind="t1_up", i=0, j=0, period=0),
+        FaultEvent(t=0, kind="t2_down", i=0, j=1, period=2)))
+    explicit = _final_state(TREE3, wl, faults=sched, fault_start=50)
+    _assert_pytree_equal(legacy, explicit)
+
+
+def test_fault_start_sweepable_without_retrace():
+    """fault_start stays a Consts scalar: sweeping it must not retrace
+    (the compiled tables are relative to it)."""
+    from repro.netsim.engine import STEP_TRACE_COUNT
+    wl = workloads.permutation(TREE2, size_bytes=16 * 4096, seed=0)
+    from repro.netsim.scenarios import Scenario
+    sc = Scenario(name="fs_sweep",
+                  cfg=SimConfig(link=LINK, tree=TREE2,
+                                faults=((0, 0, 0),), fault_start=0),
+                  wl=wl, max_ticks=6000)
+    n0 = STEP_TRACE_COUNT[0]
+    study = api.study(sc, points=[{"fault_start": 100},
+                                  {"fault_start": 400}])
+    res = study.run()
+    assert STEP_TRACE_COUNT[0] == n0 + 1, "fault_start sweep retraced"
+    a, b = res.results
+    assert a.ticks > 0 and b.ticks > 0
+
+
+# --------------------------------------------------------------------------
+# recovery knobs: exact no-ops without timeouts; the acceptance contrast
+# --------------------------------------------------------------------------
+
+def test_recovery_knobs_are_noop_without_timeouts():
+    """On a clean (fault-free, timeout-free) run, backoff + eviction must
+    leave every state leaf bitwise unchanged."""
+    wl = workloads.permutation(TREE2, size_bytes=16 * 4096, seed=3)
+    base = _final_state(TREE2, wl)
+    assert int(base.m.n_to) == 0, "meant to be a timeout-free run"
+    rec = _final_state(TREE2, wl, rto_backoff_max=4, evict_on_timeout=True)
+    _assert_pytree_equal(base, rec)
+
+
+def test_backoff_spaces_out_retries_on_dead_path():
+    """A flow stuck on a dead link fires timeouts at increasing spacing:
+    with backoff the timeout count over a fixed window drops."""
+    wl = workloads.permutation(TREE2, size_bytes=32 * 4096, seed=1)
+    # kill both uplinks of rack 0 permanently: rack-0 senders strand
+    sched = FaultSchedule(events=(
+        FaultEvent(t=0, kind="t0_up", i=0, j=0, period=0),
+        FaultEvent(t=0, kind="t0_up", i=0, j=1, period=0)))
+    base = _final_state(TREE2, wl, max_ticks=8000, faults=sched)
+    backed = _final_state(TREE2, wl, max_ticks=8000, faults=sched,
+                          rto_backoff_max=4)
+    assert int(base.m.n_to) > 0
+    assert int(backed.m.n_to) < int(base.m.n_to)
+    assert int(np.asarray(backed.rto_backoff).max()) == 4
+
+
+def test_corefail_acceptance_recovery_completes_norecovery_strands():
+    """ISSUE 8 acceptance: on the registered fail-then-repair three-tier
+    scenario, smartt with RTO backoff + REPS timeout eviction completes
+    every flow; the no-recovery configuration strands at least one (the
+    repair lands closer to the budget than one forward traversal, so a
+    stranded flow cannot sneak in after it)."""
+    from repro.netsim.scenarios import scenario
+    sc = scenario("corefail_128n_3t")
+    no_rec = api.run(sc)
+    rec = api.run(sc.with_(name="corefail+recovery",
+                           rto_backoff_max=2, evict_on_timeout=True))
+    assert rec.all_done, f"recovery config stranded: {rec.n_done}"
+    assert not no_rec.all_done, "no-recovery config was meant to strand"
+    assert no_rec.n_done < no_rec.n_flows
+    # and the recovery config escaped through evicted entropies, visibly
+    assert rec.timeouts > 0 and rec.blackholed > 0
+
+
+# --------------------------------------------------------------------------
+# recovery metrics -> RunResult.row()
+# --------------------------------------------------------------------------
+
+def test_recovery_metrics_flow_into_row():
+    from repro.netsim.scenarios import Scenario
+    wl = workloads.permutation(TREE3, size_bytes=48 * 4096, seed=2)
+    sched = FaultSchedule(events=(
+        FaultEvent(t=20, kind="t1_up", i=0, j=0, period=0),
+        FaultEvent(t=600, kind="t1_up", i=0, j=0, period=1)))
+    sc = Scenario(name="metrics_probe",
+                  cfg=SimConfig(link=LINK, tree=TREE3, faults=sched),
+                  wl=wl, max_ticks=20000)
+    r = api.run(sc)
+    row = r.row()
+    for key in ("fault_ticks", "delivered_fault_frac", "ttr_max",
+                "dip_depth", "dip_ticks", "blackholed", "timeouts"):
+        assert key in row, f"missing {key} in row: {sorted(row)}"
+    assert r.ticks > 20, "fault was meant to land mid-run"
+    assert row["fault_ticks"] == max(min(600, r.ticks) - 20, 0)
+    assert 0.0 <= row["delivered_fault_frac"] <= 1.0
+    assert 0.0 <= row["dip_depth"] <= 1.0
+    assert r.first_fault == 20
+    assert list(r.repair_ticks) == ([600] if r.ticks > 600 else [])
+    # goodput histogram integrates to total delivered bytes
+    assert r.goodput_hist is not None
+    np.testing.assert_allclose(float(np.sum(r.goodput_hist)),
+                               r.delivered_bytes, rtol=1e-6)
+
+
+def test_fault_free_row_keeps_legacy_shape():
+    """No schedule -> no recovery-metric keys (ledger rows unchanged)."""
+    from repro.netsim.scenarios import Scenario
+    wl = workloads.permutation(TREE2, size_bytes=8 * 4096, seed=0)
+    sc = Scenario(name="clean",
+                  cfg=SimConfig(link=LINK, tree=TREE2),
+                  wl=wl, max_ticks=8000)
+    row = api.run(sc).row()
+    for key in ("fault_ticks", "delivered_fault_frac", "ttr_max"):
+        assert key not in row
+
+
+# --------------------------------------------------------------------------
+# host/traced evaluation consistency
+# --------------------------------------------------------------------------
+
+def test_np_port_period_matches_traced_evaluation():
+    """The host-side metric integrator and the traced fabric gate must
+    agree at every tick of a multi-transition + flap schedule."""
+    import jax.numpy as jnp
+    wl = workloads.permutation(TREE3, size_bytes=4096, seed=0)
+    sched = FaultSchedule(
+        events=(FaultEvent(t=40, kind="t1_up", i=0, j=0, period=0),
+                FaultEvent(t=90, kind="t1_up", i=0, j=0, period=3),
+                FaultEvent(t=160, kind="t1_up", i=0, j=0, period=1),
+                FaultEvent(t=10, kind="t2_down", i=1, j=1, period=2)),
+        flaps=(Flap(kind="t0_up", i=1, j=0, up=7, cycle=11,
+                    t=25, t_end=180),))
+    cfg = SimConfig(link=LINK, tree=TREE3, faults=sched, fault_start=13)
+    topo, _, dims, consts = derive(cfg, wl)
+    cf = faults.compile_tables(sched, topo, 13)
+    fn = jax.jit(lambda t: faults.port_period(dims, consts, t))
+    for t in range(0, 220):
+        np.testing.assert_array_equal(
+            np.asarray(fn(jnp.asarray(t, jnp.int32))),
+            faults.np_port_period(cf, 13, t), err_msg=f"t={t}")
+
+
+def test_transition_horizon_never_skips_a_change():
+    """Over [t, t + transition_horizon(t)) the period vector must be
+    constant — the leap-clamp soundness condition."""
+    import jax.numpy as jnp
+    wl = workloads.permutation(TREE3, size_bytes=4096, seed=0)
+    sched = FaultSchedule(
+        events=(FaultEvent(t=30, kind="t1_up", i=1, j=0, period=0),
+                FaultEvent(t=75, kind="t1_up", i=1, j=0, period=1)),
+        flaps=(Flap(kind="t0_up", i=0, j=1, up=4, cycle=9,
+                    t=20, t_end=120),))
+    cfg = SimConfig(link=LINK, tree=TREE3, faults=sched, fault_start=7)
+    topo, _, dims, consts = derive(cfg, wl)
+    cf = faults.compile_tables(sched, topo, 7)
+    hz = jax.jit(lambda t: faults.transition_horizon(dims, consts, t))
+    for t in range(0, 160):
+        h = int(hz(jnp.asarray(t, jnp.int32)))
+        assert h >= 1
+        base = faults.np_port_period(cf, 7, t)
+        for dt in range(1, min(h, 40)):
+            np.testing.assert_array_equal(
+                faults.np_port_period(cf, 7, t + dt), base,
+                err_msg=f"period changed inside horizon: t={t} dt={dt}")

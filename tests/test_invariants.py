@@ -82,6 +82,35 @@ def test_conservation_with_dead_and_degraded_core_links():
     assert int(st.m.n_black) > 0, "dead core uplink never blackholed"
 
 
+def test_conservation_under_dynamic_fault_schedule():
+    """The ledger must close tick by tick through fail -> degrade ->
+    repair transitions and a whole-switch kill (every port the switch
+    owns blackholes at once, then all come back) — ISSUE 8 soundness."""
+    from repro.netsim.faults import FaultEvent, FaultSchedule
+    wl = workloads.permutation(TREE3, size_bytes=64 * 4096, seed=3)
+    sched = FaultSchedule(events=(
+        FaultEvent(t=50, kind="t1_up", i=0, j=0, period=0),
+        FaultEvent(t=200, kind="t1_up", i=0, j=0, period=2),
+        FaultEvent(t=350, kind="t1_up", i=0, j=0, period=1),
+        FaultEvent(t=120, kind="switch", i=5, period=0),       # a T1 switch
+        FaultEvent(t=420, kind="switch", i=5, period=1)))
+    st = _check_conservation(TREE3, wl, 600, faults=sched)
+    assert int(st.m.n_black) > 0, "schedule never blackholed a packet"
+
+
+def test_conservation_with_recovery_transport():
+    """RTO backoff + REPS eviction change *when* retransmissions happen,
+    never how many packets exist — the ledger must stay exact."""
+    from repro.netsim.faults import FaultEvent, FaultSchedule
+    wl = workloads.permutation(TREE3, size_bytes=64 * 4096, seed=4)
+    sched = FaultSchedule(events=(
+        FaultEvent(t=30, kind="t1_up", i=1, j=0, period=0),
+        FaultEvent(t=450, kind="t1_up", i=1, j=0, period=1)))
+    st = _check_conservation(TREE3, wl, 600, faults=sched,
+                             rto_backoff_max=3, evict_on_timeout=True)
+    assert int(st.m.n_to) > 0, "recovery path never exercised"
+
+
 @pytest.mark.parametrize("trimming", [True, False],
                          ids=["trim", "drop"])
 def test_conservation_pallas_fabric_transport(trimming):
