@@ -36,10 +36,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import BENCH_JSON, LINK, TREE_FLAT, emit, \
     write_bench_json
-from repro.core import registry
-from repro.kernels.enqueue_arb import ops as enqueue_arb_ops
-from repro.kernels.ring_drain import ops as ring_drain_ops
-from repro.netsim import fabric, metrics, sender, transport, workloads
+from repro.netsim import workloads
 from repro.netsim.scenarios import Scenario, scenario
 from repro.netsim.state import SimConfig
 
@@ -63,22 +60,12 @@ SCENARIOS = {
 
 
 def _phases(sim):
-    """The six tick phases with this sim's resolved backends bound —
-    mirrors the composition in ``engine.build``."""
-    cfg, dims, consts = sim.cfg, sim.dims, sim.consts
-    cc_update = registry.get(cfg.algo, cfg.cc_backend)
-    enqueue, arb = enqueue_arb_ops.get(cfg.fabric_backend)
-    drain = ring_drain_ops.get(cfg.transport_backend)
-    return {
-        "departures": lambda s: fabric.departures(dims, consts, s),
-        "arrivals": lambda s: fabric.arrivals(dims, consts, s,
-                                              enqueue=enqueue),
-        "control": lambda s: transport.control(dims, consts, cc_update, s,
-                                               drain=drain),
-        "grants": lambda s: sender.grants(dims, consts, s, arb=arb),
-        "sends": lambda s: sender.sends(dims, consts, s, arb=arb),
-        "metrics": lambda s: metrics.account(dims, consts, s),
-    }
+    """The six tick phases with this sim's resolved backends and consts
+    bound — read straight off ``sim.phases`` (the exact closures
+    ``engine.build`` composes into the step), so the profile can never
+    drift from the real tick composition."""
+    consts = sim.consts
+    return {name: functools.partial(fn, consts) for name, fn in sim.phases}
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))

@@ -25,7 +25,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.netsim import api, engine
+from repro.analysis import trace_guard
+from repro.netsim import api
 from repro.netsim.scenarios import scenario
 
 SCENARIOS = ("incast8_16n", "perm_16n")
@@ -47,10 +48,10 @@ def run_study(sc_name: str, algo: str, seeds, grid=GRID,
     sc = scenario(sc_name, algo=algo, max_ticks=max_ticks)
     t0 = time.time()
     st = api.study(sc, points=grid, seeds=seeds)
-    c0 = engine.STEP_TRACE_COUNT[0]
-    res = st.run()
+    with trace_guard("engine.step") as g:
+        res = st.run()
     build_wall = time.time() - t0
-    compiles = engine.STEP_TRACE_COUNT[0] - c0
+    compiles = g.count
     csv = []
     for r in res:
         csv.append(f"study_{sc_name}_{algo}[{r.point_tag}]s{r.seed},"

@@ -1,0 +1,20 @@
+"""Static analysis layer: jaxpr auditor + AST contract linter
+(DESIGN.md Sec. 10).
+
+Machine-checks the engine's compile-time invariants — dtype compactness,
+scatter discipline, donation de-aliasing, no host round-trips in the hot
+tick, one-compile-per-grid — plus source-level contracts (kernel
+ref/kernel signature parity, seeded randomness, numpy-only Consts
+building).  Run the whole battery with::
+
+    python -m repro.analysis
+
+This ``__init__`` stays import-light on purpose: ``engine``/``state``
+import :mod:`repro.analysis.trace_guard` for their trace counters, so
+pulling the auditor (which imports the netsim) in here would be a cycle.
+Import ``repro.analysis.audit`` / ``repro.analysis.lint`` explicitly.
+"""
+
+from repro.analysis.trace_guard import TraceCounter, counter, trace_guard
+
+__all__ = ["TraceCounter", "counter", "trace_guard"]

@@ -9,7 +9,7 @@ Sec. 2).  Runs the ``long_500k`` shape.  Optimizer states must be
 ZeRO-sharded + bf16 to fit 16 GB/chip (see repro.optim).
 """
 
-from repro.models.config import (FFN_DENSE, FFN_MOE, FFN_NONE, LayerSpec,
+from repro.models.config import (FFN_DENSE, FFN_MOE, LayerSpec,
                                  MIXER_ATTN, MIXER_MAMBA, ModelConfig,
                                  SSMConfig)
 

@@ -99,7 +99,6 @@ def input_specs(cfg: ModelConfig, shape: Shape, *, batch: int | None = None):
 def synth_inputs(cfg: ModelConfig, shape: Shape, key, *, batch: int | None = None):
     """Concrete random inputs matching input_specs (smoke tests/examples)."""
     specs = input_specs(cfg, shape, batch=batch)
-    b = batch or shape.global_batch
 
     def realize(sd, k):
         if sd.dtype == jnp.int32:

@@ -16,8 +16,6 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.red_mark import ref as R
-
 BLOCK_ROWS = 8
 LANES = 128
 

@@ -28,7 +28,6 @@ NEG_BIG = -1e30
 
 def _ssd_kernel(x_ref, loga_ref, b_ref, c_ref, y_ref, s_ref, t_ref):
     _, C, P = x_ref.shape
-    N = b_ref.shape[-1]
     x = x_ref[0].astype(jnp.float32)          # [C, P]
     la = loga_ref[0].astype(jnp.float32)      # [C]
     Bm = b_ref[0].astype(jnp.float32)         # [C, N]

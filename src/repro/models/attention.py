@@ -171,7 +171,6 @@ def attn_init(key, cfg, cross: bool = False):
 
 def attn_qkv(p, cfg, x, kv_src, positions, sh):
     """Project to q, k, v (RoPE'd, normed). kv_src = x (self) or cross feed."""
-    b = x.shape[0]
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     q = x @ p["wq"]
     k = kv_src @ p["wk"]

@@ -16,7 +16,7 @@ from repro.models import layers as L
 from repro.models import mamba2 as M
 from repro.models import mla as MLA
 from repro.models import moe as MOE
-from repro.models.config import (FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_ATTN,
+from repro.models.config import (FFN_MOE, FFN_NONE, MIXER_ATTN,
                                  MIXER_CROSS, MIXER_MAMBA, LayerSpec)
 
 

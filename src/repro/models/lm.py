@@ -19,7 +19,7 @@ from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models import mamba2 as M
 from repro.models import mla as MLA
-from repro.models.config import (FFN_NONE, MIXER_ATTN, MIXER_CROSS,
+from repro.models.config import (FFN_NONE, MIXER_CROSS,
                                  MIXER_MAMBA, ModelConfig)
 
 

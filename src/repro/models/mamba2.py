@@ -134,7 +134,6 @@ def mamba_init_cache(cfg, batch, dtype=jnp.float32):
 
 def _conv_step(cache, x1, w):
     """cache [B, K-1, C], x1 [B, C] -> (new_cache, out [B, C])."""
-    k = w.shape[0]
     hist = jnp.concatenate([cache, x1[:, None]], axis=1)      # [B, K, C]
     out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
                      w.astype(jnp.float32))

@@ -16,7 +16,7 @@ of the config sweep — into a single ``[P*S]`` vmap lane batch driven by
 one superstep run loop:
 
 * **one compile** — the composed step is traced exactly once for the
-  whole grid (``engine.STEP_TRACE_COUNT``, asserted in tests/test_api.py);
+  whole grid (``trace_guard("engine.step")``, asserted in tests/test_api.py);
   swept ``Consts`` leaves carry a leading ``[P*S]`` axis, everything else
   broadcasts;
 * **per-lane trajectories** — every lane is gated on its *own* exit
@@ -85,9 +85,14 @@ CFG_KEYS = frozenset({
 # vary the Scenario instead (one build per value).  The recovery knobs
 # (rto_backoff_max / evict_on_timeout) are here because crossing their
 # off/on boundary changes the traced graph — sweeping them would silently
-# keep the base config's branch.
+# keep the base config's branch.  The three backend selectors swap whole
+# kernel implementations, so they are static by the same argument.
+# ``repro.analysis`` (JX006) perturbs every SimConfig field through
+# ``derive`` and fails the build if this classification drifts from the
+# empirical Dims/aval impact.
 STATIC_KEYS = frozenset({
-    "link", "tree", "algo", "cc_backend", "lb", "superstep", "leap",
+    "link", "tree", "algo", "cc_backend", "fabric_backend",
+    "transport_backend", "lb", "superstep", "leap",
     "trimming", "faults", "cc_overrides", "rto_backoff_max",
     "evict_on_timeout",
 })

@@ -54,6 +54,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import counter as _trace_counter
 from repro.core import registry, reps
 from repro.core.types import CCParams
 from repro.kernels.enqueue_arb import ops as enqueue_arb_ops
@@ -70,8 +71,9 @@ I32 = jnp.int32
 F32 = jnp.float32
 
 # Incremented each time a composed step function is *traced* (not executed).
-# ``tests/test_sweep.py`` asserts a whole parameter grid costs exactly one.
-STEP_TRACE_COUNT = [0]
+# ``tests/test_sweep.py`` asserts a whole parameter grid costs exactly one:
+# ``with trace_guard("engine.step", expect=1): ...`` (repro.analysis).
+_STEP_TRACES = _trace_counter("engine.step")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +88,12 @@ class Sim:
     lb_params: reps.LBParams
     dims: Dims
     consts: Consts
+    phases: tuple           # ordered ((name, (Consts, SimState) -> SimState),
+                            #   ...) — the six tick sub-steps step_fn composes;
+                            # the phase profiler (benchmarks/profile_tick) and
+                            # the jaxpr auditor (repro.analysis.audit) walk
+                            # these so their phase split can never drift from
+                            # the real tick
     step_fn: callable       # (Consts, SimState) -> SimState — sweepable form
     step: callable          # SimState -> SimState (consts bound)
     horizon_fn: callable    # (Consts, SimState) -> i32 next-event distance
@@ -117,7 +125,7 @@ class Sim:
 
         The init state is built once and broadcast over the batch —
         only the per-seed ``salt`` is scattered (asserted by the
-        ``state.INIT_TRACE_COUNT`` check in tests/test_engine_leap.py);
+        ``trace_guard("state.init")`` check in tests/test_engine_leap.py);
         each broadcast leaf is a fresh buffer, so donation stays legal.
         """
         import numpy as _np
@@ -151,14 +159,21 @@ def build(cfg: SimConfig, wl: Workload) -> Sim:
     enqueue, arb = enqueue_arb_ops.get(cfg.fabric_backend)
     drain = ring_drain_ops.get(cfg.transport_backend)
 
+    phases = (
+        ("departures", lambda c, st: fabric.departures(dims, c, st)),
+        ("arrivals", lambda c, st: fabric.arrivals(dims, c, st,
+                                                   enqueue=enqueue)),
+        ("control", lambda c, st: transport.control(dims, c, cc_update, st,
+                                                    drain=drain)),
+        ("grants", lambda c, st: sender.grants(dims, c, st, arb=arb)),
+        ("sends", lambda c, st: sender.sends(dims, c, st, arb=arb)),
+        ("metrics", lambda c, st: metrics.account(dims, c, st)),
+    )
+
     def step_fn(consts: Consts, st: SimState) -> SimState:
-        STEP_TRACE_COUNT[0] += 1
-        st = fabric.departures(dims, consts, st)
-        st = fabric.arrivals(dims, consts, st, enqueue=enqueue)
-        st = transport.control(dims, consts, cc_update, st, drain=drain)
-        st = sender.grants(dims, consts, st, arb=arb)
-        st = sender.sends(dims, consts, st, arb=arb)
-        st = metrics.account(dims, consts, st)
+        _STEP_TRACES.hit()
+        for _, phase in phases:
+            st = phase(consts, st)
         return st._replace(now=st.now + 1)
 
     def step(st: SimState) -> SimState:
@@ -178,7 +193,7 @@ def build(cfg: SimConfig, wl: Workload) -> Sim:
         return init_state(dims, consts)
 
     return Sim(cfg=cfg, topo=topo, timing=tm, wl=wl, cc_params=consts.cc,
-               lb_params=consts.lb, dims=dims, consts=consts,
+               lb_params=consts.lb, dims=dims, consts=consts, phases=phases,
                step_fn=step_fn, step=step, horizon_fn=horizon_fn,
                horizon=horizon, init=init)
 

@@ -26,12 +26,13 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import counter as _trace_counter
 from repro.core import registry, reps
 from repro.core.types import CCParams, CCState, init_cc_state, make_cc_params
 from repro.netsim import faults as faults_schedule
 from repro.netsim.metrics import Metrics, init_metrics
 from repro.netsim.topology import build_topology
-from repro.netsim.units import (FatTreeConfig, LinkConfig, Timing,
+from repro.netsim.units import (FatTreeConfig, LinkConfig,
                                 derive_timing, gamma)
 from repro.netsim.workloads import Workload
 
@@ -509,10 +510,11 @@ def derive(cfg: SimConfig, wl: Workload):
     return topo, tm, dims, consts
 
 
-# Incremented each time ``init_state`` runs (eagerly or as a trace).
+# Counted each time ``init_state`` runs (eagerly or as a trace).
 # ``tests/test_engine_leap.py`` asserts ``Sim.run_batch`` builds exactly one
-# init state and broadcasts it, rather than re-deriving it per seed.
-INIT_TRACE_COUNT = [0]
+# init state and broadcasts it, rather than re-deriving it per seed:
+# ``with trace_guard("state.init", expect=1): ...`` (repro.analysis).
+_INIT_TRACES = _trace_counter("state.init")
 
 # Sentinel "no event in sight" horizon (i32-safe; run loops clamp it to the
 # remaining tick budget before applying a leap).
@@ -521,7 +523,7 @@ HORIZON_INF = 1 << 30
 
 def init_state(dims: Dims, consts: Consts) -> SimState:
     """Tick-0 world.  Pure in (dims, consts); safe under jit and vmap."""
-    INIT_TRACE_COUNT[0] += 1
+    _INIT_TRACES.hit()
     zeros = jnp.zeros
     NF, N, NQ = dims.NF, dims.N, dims.NQ
     cc = init_cc_state(NF, consts.cc, start_cwnd=consts.start_cwnd)

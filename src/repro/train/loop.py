@@ -12,7 +12,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import checkpointer as ckpt
 from repro.data.pipeline import DataConfig, SyntheticLM

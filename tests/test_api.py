@@ -10,7 +10,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.netsim import api, engine, scenarios, state, workloads
+from repro.analysis import trace_guard
+from repro.netsim import api, engine, scenarios, workloads
 from repro.netsim.api import apply_point
 from repro.netsim.scenarios import Scenario, scenario
 from repro.netsim.state import SimConfig
@@ -59,9 +60,8 @@ def test_study_one_compile_and_lanes_match_standalone(leap):
     st_obj = api.study(sc, points=POINTS, seeds=SEEDS)
     assert st_obj.n_lanes == len(POINTS) * len(SEEDS)
 
-    before = engine.STEP_TRACE_COUNT[0]
-    res = st_obj.run()
-    assert engine.STEP_TRACE_COUNT[0] - before == 1
+    with trace_guard("engine.step", expect=1):
+        res = st_obj.run()
 
     for pi, pt in enumerate(POINTS):
         cfg_i = apply_point(sc.cfg, pt)
@@ -124,9 +124,8 @@ def test_run_batch_matches_study_seed_lanes():
 def test_study_single_init_trace():
     """The [P*S] lane batch comes from ONE vmapped init_state trace."""
     st_obj = api.study(_scenario(), points=POINTS, seeds=SEEDS)
-    before = state.INIT_TRACE_COUNT[0]
-    states = st_obj.init()
-    assert state.INIT_TRACE_COUNT[0] - before == 1
+    with trace_guard("state.init", expect=1):
+        states = st_obj.init()
     np.testing.assert_array_equal(
         np.asarray(states.salt), np.tile(SEEDS, len(POINTS)))
 

@@ -5,7 +5,6 @@ before jax initializes — so the actual lower+compile runs in a subprocess
 (exactly how the real sweep is invoked).  Spec-rule unit tests run inline.
 """
 
-import json
 import os
 import subprocess
 import sys

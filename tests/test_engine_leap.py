@@ -11,7 +11,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.netsim import state, workloads
+from repro.analysis import trace_guard
+from repro.netsim import workloads
 from repro.netsim.engine import SimConfig, build
 from repro.netsim.sweep import build_sweep
 from repro.netsim.units import FatTreeConfig, LinkConfig
@@ -237,10 +238,9 @@ def test_run_batch_builds_one_init_and_broadcasts():
     broadcasts it over the batch, scattering only the per-seed salt."""
     wl = workloads.incast(TREE, degree=3, size_bytes=16 * 4096, seed=0)
     sim = build(SimConfig(link=LINK, tree=TREE), wl)
-    before = state.INIT_TRACE_COUNT[0]
-    st = sim.run_batch(np.arange(5), max_ticks=30000)
-    st.now.block_until_ready()
-    assert state.INIT_TRACE_COUNT[0] - before == 1
+    with trace_guard("state.init", expect=1):
+        st = sim.run_batch(np.arange(5), max_ticks=30000)
+        st.now.block_until_ready()
     np.testing.assert_array_equal(np.asarray(st.salt), np.arange(5))
 
 

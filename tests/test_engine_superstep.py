@@ -7,7 +7,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.netsim import engine, workloads
+from repro.analysis import trace_guard
+from repro.netsim import workloads
 from repro.netsim.engine import SimConfig, build
 from repro.netsim.sweep import build_sweep
 from repro.netsim.units import FatTreeConfig, LinkConfig
@@ -114,10 +115,9 @@ def test_sweep_composes_with_supersteps():
     cfgk = SimConfig(link=LINK, tree=TREE, superstep=13)
 
     swk = build_sweep(cfgk, wl, points)
-    before = engine.STEP_TRACE_COUNT[0]
-    states_k = swk.run(max_ticks=30000)
-    states_k.now.block_until_ready()
-    assert engine.STEP_TRACE_COUNT[0] - before == 1
+    with trace_guard("engine.step", expect=1):
+        states_k = swk.run(max_ticks=30000)
+        states_k.now.block_until_ready()
 
     states_1 = build_sweep(cfg1, wl, points).run(max_ticks=30000)
     np.testing.assert_array_equal(np.asarray(states_1.fct),

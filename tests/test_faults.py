@@ -23,7 +23,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.netsim import api, faults, state, workloads
+from repro.netsim import api, faults, workloads
 from repro.netsim.engine import SimConfig, build
 from repro.netsim.faults import FaultEvent, FaultSchedule, Flap
 from repro.netsim.state import derive
@@ -156,18 +156,17 @@ def test_legacy_4tuple_lowers_bitwise_three_tier():
 def test_fault_start_sweepable_without_retrace():
     """fault_start stays a Consts scalar: sweeping it must not retrace
     (the compiled tables are relative to it)."""
-    from repro.netsim.engine import STEP_TRACE_COUNT
+    from repro.analysis import trace_guard
     wl = workloads.permutation(TREE2, size_bytes=16 * 4096, seed=0)
     from repro.netsim.scenarios import Scenario
     sc = Scenario(name="fs_sweep",
                   cfg=SimConfig(link=LINK, tree=TREE2,
                                 faults=((0, 0, 0),), fault_start=0),
                   wl=wl, max_ticks=6000)
-    n0 = STEP_TRACE_COUNT[0]
     study = api.study(sc, points=[{"fault_start": 100},
                                   {"fault_start": 400}])
-    res = study.run()
-    assert STEP_TRACE_COUNT[0] == n0 + 1, "fault_start sweep retraced"
+    with trace_guard("engine.step", expect=1):   # fault_start sweep retraced?
+        res = study.run()
     a, b = res.results
     assert a.ticks > 0 and b.ticks > 0
 

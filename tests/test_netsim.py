@@ -4,7 +4,6 @@ experiment API (``api.run`` -> ``RunResult``; its ``summary()`` keeps
 the historical ``metrics.summarize`` dict shape)."""
 
 import numpy as np
-import pytest
 
 from repro.netsim import api, workloads
 from repro.netsim.engine import SimConfig, build, jain_fairness, summarize
@@ -26,7 +25,6 @@ def run(tree, wl, **kw):
 
 def test_empty_network_rtt_equals_brtt():
     """A lone cross-rack flow must measure exactly the analytic base RTT."""
-    tm = derive_timing(LINK)
     wl = workloads.permutation(SMALL, size_bytes=16 * 4096, seed=0)
     sim, st, s = run(SMALL, wl, algo="smartt", lb="ecmp",
                      cc_overrides=(("fd", 0.0),))

@@ -8,7 +8,6 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import registry
 from repro.core.smartt import smartt_update
 from repro.core.types import CCEvent, init_cc_state, make_cc_params
 from repro.core import reps

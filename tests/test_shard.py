@@ -78,7 +78,6 @@ def test_pad_lanes_shapes_and_inertness():
     untouched."""
     st = _study()
     B = st.n_lanes
-    states0 = st.init()
     padded, consts_p, n_pad = shard.pad_lanes(st.init(), st.consts_b,
                                               st.axes, 4)
     assert n_pad == (-B) % 4 and n_pad > 0

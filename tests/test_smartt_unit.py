@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import registry
 from repro.core.smartt import smartt_update
-from repro.core.types import CCEvent, CCParams, CCState, init_cc_state, make_cc_params
+from repro.core.types import CCEvent, init_cc_state, make_cc_params
 
 MTU = 4096.0
 BDP = 26 * 4096.0

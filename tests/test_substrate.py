@@ -2,7 +2,6 @@
 sharding spec rules."""
 
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -4,6 +4,7 @@ equivalence with standalone builds, and traced-parameter coverage."""
 import numpy as np
 import pytest
 
+from repro.analysis import trace_guard
 from repro.netsim import engine, workloads
 from repro.netsim.state import SimConfig
 from repro.netsim.sweep import apply_point, build_sweep
@@ -26,10 +27,9 @@ def _wl():
 def test_grid_costs_exactly_one_step_compilation():
     sw = build_sweep(CFG, _wl(), POINTS)
     assert sw.n_points == 9
-    before = engine.STEP_TRACE_COUNT[0]
-    states = sw.run(max_ticks=30000)
-    states.now.block_until_ready()
-    assert engine.STEP_TRACE_COUNT[0] - before == 1
+    with trace_guard("engine.step", expect=1):
+        states = sw.run(max_ticks=30000)
+        states.now.block_until_ready()
     assert bool(np.all(np.asarray(states.done)))
     rows = sw.summaries(states)
     assert len(rows) == len(POINTS) and all(r["all_done"] for r in rows)
