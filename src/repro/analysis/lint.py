@@ -41,6 +41,7 @@ PHASE_MODULES = ("src/repro/netsim/fabric.py",
 HOST_MODULES = ("src/repro/netsim/topology.py",
                 "src/repro/netsim/units.py",
                 "src/repro/netsim/workloads.py",
+                "src/repro/netsim/collectives.py",
                 "src/repro/netsim/scenarios.py")
 # faults.py is split: tables build on host, but these three are traced
 # per tick by the fabric and legitimately use jnp
@@ -164,7 +165,7 @@ def check_kernel_parity(kernels_dir: Path | None = None) -> list:
 # sections whose row names are `scenario/...` when no explicit
 # ``scenario`` field is present; other sections are skipped
 _NAME_PREFIX_SECTIONS = ("perf", "studies", "studies_quick", "failover",
-                         "phase_profile", "study_throughput")
+                         "phase_profile", "study_throughput", "collectives")
 
 
 def check_ledger_keys(bench_json: Path | None = None) -> list:

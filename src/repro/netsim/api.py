@@ -185,10 +185,14 @@ _run_lanes = shard._run_lanes
 
 
 def _flow_meta(sim: engine.Sim) -> dict:
-    """Host copies of the per-flow constants a RunResult carries."""
+    """Host copies of the per-flow constants a RunResult carries.
+    ``coll_id`` is host-only workload metadata (never lowered into
+    Consts) — it groups flows into collectives for the CCT metric."""
     return dict(size=np.asarray(sim.consts.size),
                 t_start=np.asarray(sim.consts.t_start),
-                flow_brtt=np.asarray(sim.consts.cc.brtt))
+                flow_brtt=np.asarray(sim.consts.cc.brtt),
+                coll_id=(None if sim.wl.coll_id is None
+                         else np.asarray(sim.wl.coll_id)))
 
 
 @dataclasses.dataclass(frozen=True, eq=False, repr=False)
@@ -226,6 +230,8 @@ class RunResult:
     rtt_hist: np.ndarray
     q_mean: float
     q_max: int
+    # collective grouping (None when the workload has no coll_id column)
+    coll_id: np.ndarray | None = None   # i32 [NF], -1 = not in a collective
     # recovery metrics (zero/empty when the config has no fault schedule)
     delivered_bytes_fault: float = 0.0
     goodput_hist: np.ndarray | None = None  # f32 [GOODPUT_BINS] binned bytes
@@ -353,6 +359,34 @@ class RunResult:
     def spurious_frac(self) -> float:
         return self.spurious_retx / max(1, self.delivered_pkts)
 
+    # -- collective completion time (DESIGN.md Sec. 11) ---------------------
+
+    @property
+    def cct_by_coll(self) -> dict:
+        """Per-collective completion time (CCT), keyed by ``coll_id``:
+        ticks from the group's earliest ``t_start`` to its last flow's
+        delivery (``max(fct + t_start) - min(t_start)`` over members);
+        -1 while any member is unfinished.  Empty without a ``coll_id``
+        column."""
+        if self.coll_id is None:
+            return {}
+        out = {}
+        finish = self.fct.astype(np.int64) + self.t_start
+        for c in np.unique(self.coll_id[self.coll_id >= 0]):
+            m = self.coll_id == c
+            out[int(c)] = (int(finish[m].max() - self.t_start[m].min())
+                           if self.done[m].all() else -1)
+        return out
+
+    @property
+    def cct(self) -> int:
+        """Slowest collective's CCT (-1: none defined, or any collective
+        unfinished) — the scalar the bench ledger tracks."""
+        ccts = self.cct_by_coll
+        if not ccts or any(v < 0 for v in ccts.values()):
+            return -1
+        return max(ccts.values())
+
     # -- recovery metrics (ISSUE 8) -----------------------------------------
 
     @property
@@ -463,6 +497,10 @@ class RunResult:
             delivered_bytes=self.delivered_bytes,
             q_mean=round(self.q_mean, 6), q_max=self.q_max,
         )
+        if self.coll_id is not None and np.any(self.coll_id >= 0):
+            # collective metrics, only when the workload groups flows
+            # (keeps plain flow-list ledger rows unchanged)
+            d.update(cct=self.cct, n_collectives=len(self.cct_by_coll))
         if self.first_fault >= 0:
             # recovery metrics, only for runs with an active fault
             # schedule (keeps fault-free ledger rows unchanged)

@@ -117,6 +117,10 @@ def scenario_digest(sc: Scenario, max_ticks: int) -> str:
     _update_value(h, (wl.name, int(wl.window)))
     for arr in (wl.src, wl.dst, wl.size, wl.t_start, wl.order):
         _update_value(h, np.asarray(arr))
+    # dependency table + collective grouping; the "none" marker keeps an
+    # absent column distinguishable from any real array
+    for arr in (wl.dep_par, wl.dep_thr, wl.coll_id):
+        _update_value(h, "none" if arr is None else np.asarray(arr))
     _update_value(h, int(max_ticks))
     return h.hexdigest()
 

@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-from repro.netsim import faults, workloads
+from repro.netsim import collectives, faults, workloads
 from repro.netsim.state import SimConfig
 from repro.netsim.units import FatTreeConfig, LinkConfig
 from repro.netsim.workloads import Workload
@@ -248,6 +248,42 @@ register("switchkill_128n_3t", lambda: _std(
         # port it owns blackholes — and comes back at t=3000.
         faults.FaultEvent(t=500, kind="switch", i=17, period=0),
         faults.FaultEvent(t=3_000, kind="switch", i=17, period=1)))))
+
+# dependency-driven collectives (DESIGN.md Sec. 11): the chunk DAG gates
+# each flow on its parents' delivered bytes; rows land in the BENCH
+# `collectives` section with CCT next to FCT (benchmarks/collectives.py).
+register("tiny_allreduce_ring", lambda: _std(
+    "tiny_allreduce_ring", TREE_3T_TINY,
+    collectives.ring_allreduce(TREE_3T_TINY, chunk_bytes=8 * KiB, nodes=8),
+    20_000))
+register("tiny_allgather", lambda: _std(
+    "tiny_allgather", TREE_TINY,
+    collectives.all_gather(TREE_TINY, chunk_bytes=16 * KiB, nodes=4),
+    20_000))
+register("tiny_pipeline", lambda: _std(
+    "tiny_pipeline", TREE_TINY,
+    collectives.pipeline(TREE_TINY, stage_bytes=8 * KiB, stages=3,
+                         microbatches=4),
+    20_000))
+register("allreduce_ring_128n_3t", lambda: _std(
+    "allreduce_ring_128n_3t", TREE_128_3T,
+    collectives.ring_allreduce(TREE_128_3T, chunk_bytes=32 * KiB, nodes=128),
+    120_000))
+register("allreduce_tree_128n_3t", lambda: _std(
+    "allreduce_tree_128n_3t", TREE_128_3T,
+    collectives.tree_allreduce(TREE_128_3T, msg_bytes=128 * KiB, nodes=128,
+                               branching=2),
+    120_000))
+register("allgather_64n_3t", lambda: _std(
+    "allgather_64n_3t", TREE_128_3T,
+    collectives.all_gather(TREE_128_3T, chunk_bytes=64 * KiB, nodes=64,
+                           spread=True),
+    120_000))
+register("pipeline_32n", lambda: _std(
+    "pipeline_32n", TREE_FLAT,
+    collectives.pipeline(TREE_FLAT, stage_bytes=64 * KiB, stages=32,
+                         microbatches=8),
+    120_000))
 
 # sparse/large-message scenarios (event-horizon leap targets, DESIGN 6.3)
 register("sparse_heavy_32n", lambda: _std(

@@ -27,13 +27,33 @@ I32 = jnp.int32
 F32 = jnp.float32
 
 
+def activated(dims: Dims, consts: Consts, st: SimState):
+    """The activation predicate (DESIGN.md Sec. 11): a flow is live once
+    ``t >= t_start``, it is unfinished, and — when the workload carries a
+    dependency table — every parent has delivered its threshold bytes.
+
+    ``st.goodput`` only grows on delivery (an *eventful* tick by
+    construction), so between events this predicate is constant: the leap
+    horizon needs no dependency-release term beyond sharing this exact
+    predicate with ``admission`` (the clamp that keeps leap-on bit-equal
+    to leap-off).  With ``Dims.D == 0`` the dependency gather vanishes and
+    the traced graph is the legacy ``t_start``-only one, bit-for-bit."""
+    act = (st.now >= consts.t_start) & ~st.done
+    if dims.D:
+        # goodput of each parent (pad row NF covers the free-slot sentinel,
+        # which the == NF test forces true regardless)
+        gp = jnp.pad(st.goodput, (0, 1))[consts.dep_par]        # [NF, D]
+        ok = (consts.dep_par == dims.NF) | (gp >= consts.dep_thr)
+        act &= jnp.all(ok, axis=1)
+    return act
+
+
 def _grant_demand(dims: Dims, consts: Consts, st: SimState):
     """Flows whose receiver owes pull credit (EQDS): outstanding credit
     window above received + known-lost bytes — self-clocks, and re-grants
     for trimmed packets (the receiver sees trimmed headers) so
     retransmissions never starve."""
-    started_flows = (st.now >= consts.t_start) & ~st.done
-    return started_flows & (
+    return activated(dims, consts, st) & (
         st.granted - st.goodput.astype(F32) - st.trim_seen[:dims.NF]
         < consts.credit_window)
 
@@ -73,13 +93,12 @@ def admission(dims: Dims, consts: Consts, st: SimState):
     leap ``horizon`` runs only for unpaced configurations, where this IS
     the full admission).  Returns ``(elig, has_retx, seq_emit, nsize)``.
     """
-    t = st.now
     NF, W, FMAX, window = dims.NF, dims.W, dims.FMAX, dims.window
     mtu_i = dims.mtu
     flow_ids = consts.flow_ids
     cc = st.cc
 
-    started = (t >= consts.t_start) & ~st.done
+    started = activated(dims, consts, st)
     if window < FMAX:
         # windowed-alltoall eligibility: < window unfinished predecessors.
         # Each flow's (sender, column) is static (consts.slot_of), so the
@@ -211,9 +230,12 @@ def horizon(dims: Dims, consts: Consts, st: SimState):
     for credit-based algorithms — any receiver owes a grant: both
     predicates are functions of state that only *eventful* ticks mutate,
     so between events the only thing that can flip them is a flow-start
-    deadline, which bounds the leap.  Never traced for paced
-    configurations (``Dims.leap`` is forced off there — the pacing budget
-    accrues every tick).
+    deadline, which bounds the leap.  Dependency releases (DESIGN.md Sec.
+    11) need no extra term: ``admission`` (shared here bit-for-bit, the
+    leap clamp) gates on ``sender.activated``, and a parent's threshold
+    crossing rides on a delivery — an arrival the fabric horizon already
+    bounds.  Never traced for paced configurations (``Dims.leap`` is
+    forced off there — the pacing budget accrues every tick).
     """
     t = st.now
     elig, _, _, _ = admission(dims, consts, st)

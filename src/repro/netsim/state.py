@@ -120,6 +120,8 @@ class Dims(NamedTuple):
     QE: int         # edge-port base: queues [QE, NQ) are the t0_down ports
     tiers: int      # 2 or 3 (FatTreeConfig.tiers)
     window: int     # windowed-alltoall eligibility window
+    D: int          # dependency-table width (0 = no table: the legacy
+                    # t_start-only activation graph, bit-for-bit)
     mtu: int        # bytes
     brtt_inter: int  # base RTT ticks == BDP packets
     bdp_bytes: float
@@ -152,6 +154,10 @@ class Consts(NamedTuple):
     dst: jnp.ndarray             # i32 [NF]
     size: jnp.ndarray            # i32 [NF] flow bytes
     t_start: jnp.ndarray         # i32 [NF]
+    dep_par: jnp.ndarray         # i32 [NF, D] parent flow id (NF = unused
+                                 #   slot; D = 0 without a dependency table)
+    dep_thr: jnp.ndarray         # i32 [NF, D] parent bytes that must have
+                                 #   landed before this flow activates
     ret: jnp.ndarray             # i32 scalar ACK/grant return latency (the
                                  #   ack ring layout requires it constant)
     flows_of: jnp.ndarray        # i32 [N, FMAX] per-sender flow table
@@ -369,6 +375,21 @@ def derive(cfg: SimConfig, wl: Workload):
         cnt[r] += 1
     window = int(min(wl.window, FMAX))
 
+    # ---- dependency table (collectives, DESIGN.md Sec. 11) ----
+    # Dense [NF, D] parent ids + byte thresholds; the workload's -1 free
+    # slots normalize to the NF sentinel (same write-off convention as
+    # flows_of).  D == 0 keeps sender.activated on the legacy t_start-only
+    # path — structurally the same traced graph as before the table existed.
+    D = wl.n_deps
+    if D:
+        dep_par = np.asarray(wl.dep_par, np.int64).copy()
+        dep_par[dep_par < 0] = NF
+        dep_thr = np.asarray(wl.dep_thr, np.int64).copy()
+        dep_thr[dep_par == NF] = 0          # free slots trivially satisfied
+    else:
+        dep_par = np.zeros((NF, 0), np.int64)
+        dep_thr = np.zeros((NF, 0), np.int64)
+
     # ---- per-emitter wire latency ----
     # fabric.departures / sender.sends rely on the latency being uniform
     # within each of the three contiguous emitter classes (switch-facing
@@ -435,7 +456,7 @@ def derive(cfg: SimConfig, wl: Workload):
         N=N, NQ=NQ, NE=NE, NF=NF, CAP=CAP, W=W, WW=WW, L=L, R=R,
         MAXW=MAXW, FMAX=FMAX, FRMAX=FRMAX, P=P, U=U, M=M, QE=QE,
         tiers=tree.tiers,
-        window=window, mtu=int(MTU), brtt_inter=int(tm.brtt_inter),
+        window=window, D=D, mtu=int(MTU), brtt_inter=int(tm.brtt_inter),
         bdp_bytes=bdp, superstep=superstep, leap=leap,
         trimming=cfg.trimming,
         credit_based=cfg.algo in registry.CREDIT_BASED,
@@ -450,6 +471,8 @@ def derive(cfg: SimConfig, wl: Workload):
         dst=jnp.asarray(wl.dst, I32),
         size=jnp.asarray(wl.size, I32),
         t_start=jnp.asarray(wl.t_start, I32),
+        dep_par=jnp.asarray(dep_par, I32),
+        dep_thr=jnp.asarray(dep_thr, I32),
         ret=ret_f,
         flows_of=jnp.asarray(flows_of),
         slot_of=jnp.asarray(slot_of),

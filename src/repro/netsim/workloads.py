@@ -11,10 +11,19 @@ windowed alltoall (Sec. 4.5): a sender's flow with per-sender order index j
 becomes eligible only while fewer than ``window`` of its predecessors are
 unfinished, keeping k flows active per node at all times.
 
+Dependency-driven traffic (collectives — DESIGN.md Sec. 11) rides on the
+optional ``dep_par``/``dep_thr`` table: flow ``f`` activates only once
+``t >= t_start[f]`` *and* every parent ``dep_par[f, j]`` has delivered at
+least ``dep_thr[f, j]`` bytes to its receiver (slot sentinel ``-1`` =
+unused).  ``coll_id`` groups flows into collectives for the CCT metric;
+it never reaches the device.  ``netsim/collectives.py`` emits these
+tables for ring/tree allreduce, all-gather, and pipeline patterns.
+
 ``Workload.validate()`` sanity-checks a table (self-flows, sizes, start
-ticks, node bounds, window/order consistency) with actionable errors;
-``state.derive`` calls it before any shape math, so hand-built tables
-fail fast instead of deep inside tracing.
+ticks, node bounds, window/order consistency, dependency shape/range/
+threshold bounds and DAG acyclicity via Kahn's algorithm) with actionable
+errors; ``state.derive`` calls it before any shape math, so hand-built
+tables fail fast instead of deep inside tracing.
 """
 
 from __future__ import annotations
@@ -35,10 +44,21 @@ class Workload:
     t_start: np.ndarray      # [F] i32 tick
     order: np.ndarray        # [F] i32 per-sender flow ordinal (alltoall windowing)
     window: int = 1 << 30    # flows eligible per sender at once
+    # -- optional dependency table (collectives; None = legacy t_start-only)
+    dep_par: np.ndarray | None = None   # [F, D] i32 parent flow id (-1 = free)
+    dep_thr: np.ndarray | None = None   # [F, D] i32 parent bytes that must
+                                        #   have landed before this flow starts
+    coll_id: np.ndarray | None = None   # [F] i32 collective group (-1 = none);
+                                        #   host-only — drives the CCT metric
 
     @property
     def n_flows(self) -> int:
         return int(self.src.shape[0])
+
+    @property
+    def n_deps(self) -> int:
+        """Dependency-table width D (0 = no table)."""
+        return 0 if self.dep_par is None else int(self.dep_par.shape[1])
 
     def validate(self, n_nodes: int | None = None) -> "Workload":
         """Check the flow table before it reaches tracing.
@@ -95,6 +115,7 @@ class Workload:
                 f"workload {self.name!r}: flows {_idx(oob)} reference "
                 f"nodes outside {bound}; the workload was built for a "
                 f"different topology")
+        self._validate_deps(_idx)
         # Windowing admits a sender's flows in `order`: a flow becomes
         # eligible once fewer than `window` of its order-predecessors are
         # unfinished.  If a window-gated flow (order index >= window —
@@ -123,6 +144,83 @@ class Workload:
                     f"eligibility window never blocks a flow past its "
                     f"start tick")
         return self
+
+    def _validate_deps(self, _idx) -> None:
+        """Dependency-table checks: shape alignment, parent-id range,
+        threshold bounds, and DAG acyclicity (Kahn's algorithm)."""
+        F = self.n_flows
+        if (self.dep_par is None) != (self.dep_thr is None):
+            have = "dep_par" if self.dep_par is not None else "dep_thr"
+            raise ValueError(
+                f"workload {self.name!r}: {have} set without its partner; "
+                f"dep_par and dep_thr must be given together ([F, D] each)")
+        if self.coll_id is not None:
+            cid = np.asarray(self.coll_id)
+            if cid.ndim != 1 or cid.shape[0] != F:
+                raise ValueError(
+                    f"workload {self.name!r}: coll_id must be 1-D [n_flows],"
+                    f" got shape {cid.shape}")
+            bad = cid < -1
+            if np.any(bad):
+                raise ValueError(
+                    f"workload {self.name!r}: flows {_idx(bad)} have "
+                    f"coll_id < -1; use -1 for flows outside any collective")
+        if self.dep_par is None:
+            return
+        par = np.asarray(self.dep_par)
+        thr = np.asarray(self.dep_thr)
+        if par.ndim != 2 or par.shape[0] != F or thr.shape != par.shape:
+            raise ValueError(
+                f"workload {self.name!r}: dependency table must be two "
+                f"aligned [n_flows, D] arrays; got dep_par {par.shape}, "
+                f"dep_thr {thr.shape} for {F} flows")
+        if par.shape[1] == 0:
+            return
+        used = par >= 0
+        oob = used & (par >= F)
+        if np.any(oob):
+            rows = np.flatnonzero(oob.any(axis=1))[:8].tolist()
+            raise ValueError(
+                f"workload {self.name!r}: flows {rows} reference parent "
+                f"flow ids outside [0, {F}); dep_par must name flows of "
+                f"this workload (-1 = unused slot)")
+        self_dep = used & (par == np.arange(F, dtype=np.int64)[:, None])
+        if np.any(self_dep):
+            rows = np.flatnonzero(self_dep.any(axis=1))[:8].tolist()
+            raise ValueError(
+                f"workload {self.name!r}: flows {rows} depend on "
+                f"themselves; a flow cannot gate its own start")
+        parent_size = np.where(used, np.asarray(self.size)[
+            np.clip(par, 0, F - 1)], 1)
+        bad_thr = used & ((thr < 1) | (thr > parent_size))
+        if np.any(bad_thr):
+            rows = np.flatnonzero(bad_thr.any(axis=1))[:8].tolist()
+            raise ValueError(
+                f"workload {self.name!r}: flows {rows} have dependency "
+                f"thresholds outside [1, parent size] bytes; a threshold "
+                f"above the parent's size can never be met")
+        # Kahn's algorithm over parent -> child edges: anything left with
+        # unresolved parents after the peel sits on (or behind) a cycle.
+        indeg = used.sum(axis=1).astype(np.int64)
+        children: list[list[int]] = [[] for _ in range(F)]
+        for f, p in zip(*np.nonzero(used)):
+            children[int(par[f, p])].append(int(f))
+        queue = list(np.flatnonzero(indeg == 0))
+        done = 0
+        while queue:
+            p = queue.pop()
+            done += 1
+            for c in children[p]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    queue.append(c)
+        if done < F:
+            stuck = np.flatnonzero(indeg > 0)[:8].tolist()
+            raise ValueError(
+                f"workload {self.name!r}: dependency cycle — flows "
+                f"{stuck} can never activate (Kahn's algorithm leaves "
+                f"them with unresolved parents); break the cycle in "
+                f"dep_par")
 
 
 def incast(tree: FatTreeConfig, degree: int, size_bytes: int, receiver: int = 0,

@@ -184,3 +184,46 @@ if HAVE_HYPOTHESIS:
     @given(st.integers(min_value=0, max_value=2**31 - 1))
     def test_chaos_conservation_hypothesis(seed):
         check_conservation(seed, ticks=250)
+
+
+# ---- dependency-gated collectives under faults (DESIGN.md Sec. 11) -------
+
+def check_collective_no_stall(seed: int, budget: int = 30000) -> None:
+    """A mid-collective fault must never deadlock activation: once the
+    schedule heals (all-healthy after T_HEAL by construction), stalled
+    parents finish via timeout recovery and every dependent flow is
+    eventually released — the DAG drains."""
+    from repro.netsim import collectives
+    wl = collectives.ring_allreduce(TREE3, chunk_bytes=4 * 4096, nodes=8)
+    sched = chaos_schedule(seed)
+    sim = build(SimConfig(link=LINK, tree=TREE3, faults=sched,
+                          **_recovery_knobs(seed)), wl)
+    s = sim.run(max_ticks=budget)
+    done = np.asarray(s.done)
+    assert done.all(), (
+        f"seed {seed}: {int(done.sum())}/{done.size} collective flows done "
+        f"after {budget} ticks on an all-healthy-after-{T_HEAL} fabric"
+        f"\nschedule: {sched}")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_chaos_collective_no_permanent_stall(seed):
+    check_collective_no_stall(seed)
+
+
+def test_mid_collective_uplink_kill_does_not_deadlock():
+    """The ISSUE's pointed case: kill both uplinks of the rack hosting a
+    ring participant mid-collective, heal later; the dependency chain
+    threads through the dead rack, so a wrong activation predicate (or a
+    lost release) would stall the whole ring forever."""
+    from repro.netsim import collectives
+    wl = collectives.ring_allreduce(TREE3, chunk_bytes=4 * 4096, nodes=8)
+    sched = FaultSchedule(events=(
+        FaultEvent(t=40, kind="t0_up", i=0, j=0, period=0),
+        FaultEvent(t=40, kind="t0_up", i=0, j=1, period=0),
+        FaultEvent(t=400, kind="t0_up", i=0, j=0, period=1),
+        FaultEvent(t=400, kind="t0_up", i=0, j=1, period=1)))
+    sim = build(SimConfig(link=LINK, tree=TREE3, faults=sched), wl)
+    s = sim.run(max_ticks=30000)
+    assert int(s.m.n_black) > 0, "the kill never bit"
+    assert bool(np.asarray(s.done).all()), "collective stalled permanently"

@@ -7,12 +7,14 @@ grants, timeout recovery without trimming, faulted links, the sparse
 heavy-tailed scenario the perf benchmark leans on, and the batched /
 sweep run loops with their min-over-batch leap."""
 
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
 
 from repro.analysis import trace_guard
-from repro.netsim import workloads
+from repro.netsim import collectives, workloads
 from repro.netsim.engine import SimConfig, build
 from repro.netsim.sweep import build_sweep
 from repro.netsim.units import FatTreeConfig, LinkConfig
@@ -256,3 +258,29 @@ def test_leap_sweep_per_point_horizons():
     st_off = build_sweep(SimConfig(link=LINK, tree=TREE, leap=False),
                          wl, points).run(max_ticks=30000)
     _assert_state_equal(st_off, st_on)
+
+
+def test_leap_bit_for_bit_dependency_gated_ring_allreduce():
+    """Dependency-gated activation (DESIGN.md Sec. 11): the horizon
+    shares ``sender.activated`` with admission, and threshold crossings
+    ride on deliveries the fabric horizon already bounds — so leap-on
+    must stay bitwise equal through a full ring allreduce whose every
+    flow past step 0 is released by a parent's chunk landing."""
+    wl = collectives.ring_allreduce(TREE3, chunk_bytes=4 * 4096, nodes=8)
+    st = _assert_leap_equal(TREE3, wl, max_ticks=40000)
+    assert bool(np.asarray(st.done).all())
+
+
+def test_leap_bit_for_bit_dependency_chain_sparse():
+    """A staggered pipeline chain: activation alternates between
+    start-clamped waits (t_start far beyond the dependency release) and
+    dep-driven releases, with multi-thousand-tick quiescent stretches in
+    between — the regime where an unclamped dependency term would let
+    the leap overshoot a release tick."""
+    pl = collectives.pipeline(TREE, stage_bytes=8 * 4096, stages=4,
+                              microbatches=2)
+    wl = dataclasses.replace(
+        pl, t_start=(3000 * np.arange(pl.n_flows)).astype(np.int32))
+    st = _assert_leap_equal(TREE, wl, max_ticks=40000)
+    assert bool(np.asarray(st.done).all())
+    assert int(st.now) > 5000          # the span really is sparse

@@ -13,7 +13,7 @@ from repro.kernels.enqueue_arb import ops as enqueue_arb_ops
 from repro.kernels.ring_drain import ops as ring_drain_ops
 from repro.netsim.engine import SimConfig, build, summarize
 from repro.netsim.units import FatTreeConfig, LinkConfig
-from repro.netsim import workloads
+from repro.netsim import collectives, workloads
 
 TREE = FatTreeConfig(racks=2, nodes_per_rack=4, uplinks=2)
 TREE_3T = FatTreeConfig(racks=4, nodes_per_rack=2, uplinks=2,
@@ -108,3 +108,17 @@ def test_registry_backend_resolution():
         registry.get("smartt", "cuda")        # unknown backend
     with pytest.raises(KeyError):
         registry.get("nope")
+
+
+def test_fabric_transport_pallas_dependency_gated_collective():
+    """Backend parity under dependency gating (DESIGN.md Sec. 11): the
+    activation predicate reads goodput the ring-drain kernel helped
+    produce, so the kernels and the jnp phases must release every
+    dependent flow on the same tick, engine-deep."""
+    wl = collectives.ring_allreduce(TREE_3T, chunk_bytes=2 * 4096, nodes=8)
+    st_j = _run_fixed(TREE_3T, fabric_backend="jnp", transport_backend="jnp",
+                      ticks=8000, wl=wl)
+    st_p = _run_fixed(TREE_3T, fabric_backend="pallas",
+                      transport_backend="pallas", ticks=8000, wl=wl)
+    assert bool(np.asarray(st_j.done).all())
+    _assert_states_equal(st_j, st_p)

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.analysis import trace_guard
-from repro.netsim import workloads
+from repro.netsim import collectives, workloads
 from repro.netsim.engine import SimConfig, build
 from repro.netsim.sweep import build_sweep
 from repro.netsim.units import FatTreeConfig, LinkConfig
@@ -159,3 +159,15 @@ def test_legacy_baseline_matches_production_trajectory():
     np.testing.assert_array_equal(np.asarray(st_l.goodput),
                                   np.asarray(st_p.goodput))
     assert int(st_l.now) == int(st_p.now)
+
+
+def test_superstep_exact_dependency_gated_collectives():
+    """K>1 vs K=1 under dependency gating (DESIGN.md Sec. 11): a flow
+    released mid-superstep by a parent's chunk landing must activate on
+    exactly the same tick inside the fused body."""
+    wl = collectives.ring_allreduce(TREE, chunk_bytes=4 * 4096, nodes=8)
+    _, st1 = _run(TREE, wl, superstep=1)
+    assert bool(np.asarray(st1.done).all())
+    for k in (0, 7):          # 0 = auto (one base RTT); 7 doesn't divide
+        _, stk = _run(TREE, wl, superstep=k)
+        _assert_state_equal(st1, stk)

@@ -151,3 +151,15 @@ def test_paper_scale_three_tier_bit_parity():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     for a, b in zip(jax.tree.leaves(st_ref), jax.tree.leaves(lane)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[0])
+
+
+def test_conservation_dependency_gated_collective():
+    """Dependency gating (DESIGN.md Sec. 11) only delays emissions — it
+    must never invent or lose a packet: the ledger closes tick by tick
+    through a ring allreduce whose every post-step-0 flow waits on a
+    parent chunk, including across the trim-recovery path of the
+    oversubscribed core."""
+    from repro.netsim import collectives
+    wl = collectives.ring_allreduce(TREE3, chunk_bytes=6 * 4096, nodes=8)
+    st = _check_conservation(TREE3, wl, 500)
+    assert int(st.m.delivered_pkts) > 0
